@@ -1,0 +1,52 @@
+"""Cross-layer consistency: the paper-side analytic cost model (Sec. III,
+eta = FLOPs of the fine-tuning step) vs the compiled-artifact ground truth
+(dry-run probe HLO FLOPs). CARD's decisions are only as good as eta — this
+table shows the analytic model tracks the compiled program within ~2x for
+every architecture family."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.core.cost_model import Workload
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def run(path: str = DEFAULT_PATH, shape_name: str = "train_4k") -> List[Dict]:
+    shape = INPUT_SHAPES[shape_name]
+    recs = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok") and r["shape"] == shape_name \
+                        and r["mesh"] == "16x16":
+                    recs[r["arch"]] = r
+    rows = []
+    for arch, r in sorted(recs.items()):
+        cfg = get_config(arch)
+        w = Workload(cfg, shape.global_batch, shape.seq_len)
+        analytic = w.total_flops()                   # eta (Eq. 8 numerator)
+        compiled = r["roofline"]["flops"] * 256      # global HLO FLOPs
+        rows.append({
+            "arch": arch,
+            "analytic_eta_pflops": analytic / 1e15,
+            "compiled_pflops": compiled / 1e15,
+            "ratio_analytic_over_compiled": analytic / compiled,
+        })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(f"{row['arch']:24s} eta={row['analytic_eta_pflops']:9.2f}P "
+              f"hlo={row['compiled_pflops']:9.2f}P "
+              f"ratio={row['ratio_analytic_over_compiled']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

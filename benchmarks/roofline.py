@@ -1,0 +1,77 @@
+"""§Roofline: render the per-(arch x shape x mesh) roofline table from the
+dry-run JSONL (results/dryrun.jsonl), with dominant-term classification and
+the MODEL_FLOPS / HLO_FLOPS usefulness ratio."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    recs: Dict = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            # keep the LAST record per combo (re-runs supersede)
+            recs[(r["arch"], r["shape"], r["mesh"], r.get("cut", 0))] = r
+    return list(recs.values())
+
+
+def table(recs: List[Dict], mesh: Optional[str] = "16x16") -> str:
+    rows = []
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<8} {'comp_s':>9} "
+           f"{'mem_s':>9} {'coll_s':>9} {'dominant':>10} {'useful':>7} fits")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if mesh and r["mesh"] != mesh:
+            continue
+        if not r.get("ok"):
+            rows.append(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} "
+                        f"FAILED: {r.get('error', '?')[:60]}")
+            continue
+        roof = r["roofline"]
+        temp = (r.get("memory") or {}).get("temp_bytes") or 0
+        arg = (r.get("memory") or {}).get("argument_bytes") or 0
+        fits = "Y" if (temp + arg) <= 16e9 else f"N({(temp + arg) / 1e9:.0f}G)"
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} "
+            f"{roof['compute_s']:>9.4g} {roof['memory_s']:>9.4g} "
+            f"{roof['collective_s']:>9.4g} {roof['dominant']:>10} "
+            f"{ratio if ratio is None else round(ratio, 3):>7} {fits}")
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    return {"total": len(recs), "ok": len(ok),
+            "failed": len(recs) - len(ok), "dominant_terms": doms}
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dry-run records; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--mesh both --out results/dryrun.jsonl")
+        return
+    print(table(recs, mesh="16x16"))
+    print()
+    print(table(recs, mesh="2x16x16"))
+    print()
+    print(json.dumps(summary(recs)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Serving example: batched autoregressive decoding with KV/SSM caches for
+every assigned architecture family (reduced configs, CPU).
+
+Shows the serve path the decode_32k / long_500k dry-run shapes lower:
+dense GQA full-cache, sliding-window ring buffer, Mamba2 constant state,
+hybrid attn+SSM, MoE top-k routing, and an embeds-frontend (MusicGen stub).
+
+    PYTHONPATH=src python examples/serve_multiarch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.serve import generate
+from repro.models import model as M
+
+ARCHS = ["qwen3-0.6b", "granite-moe-3b-a800m", "mamba2-370m", "hymba-1.5b",
+         "qwen2-7b"]
+
+
+def main() -> None:
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        t0 = time.time()
+        toks = generate(cfg, params["frozen"], params["lora"], prompt,
+                        max_new=12, temperature=0.8,
+                        key=jax.random.PRNGKey(2))
+        dt = time.time() - t0
+        print(f"{arch:24s} [{cfg.family:6s}] generated {toks.shape} "
+              f"in {dt:5.1f}s  sample={toks[0, :6].tolist()}")
+
+    # embeds-mode arch: frontend stub provides frame embeddings; decode then
+    # feeds generated *tokens* through the decoder's own embedding table
+    cfg = get_config("musicgen-large").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    cache = M.init_cache(cfg, 1, 16)
+    frame = jax.random.normal(jax.random.PRNGKey(3), (1, 1, cfg.d_model),
+                              jnp.float32) * 0.02
+    logits, cache = M.decode_step(params["frozen"], params["lora"], cache,
+                                  frame, jnp.int32(0), cfg)
+    print(f"{'musicgen-large':24s} [audio ] one decode step from a frame "
+          f"embedding -> logits {logits.shape}")
+
+
+def continuous_batching_demo() -> None:
+    """vLLM-style continuous batching over the cached decode path."""
+    import numpy as np
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=3,
+                        max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 4 + i,
+                                               dtype=np.int32),
+                           max_new=8))
+    stats = eng.run_until_drained()
+    print(f"continuous batching: {stats['completed']} reqs, "
+          f"{stats['tokens']} tokens in {stats['ticks']} ticks "
+          f"({stats['tokens_per_sec']:.1f} tok/s CPU, "
+          f"ttft {stats['mean_ttft_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()
+    continuous_batching_demo()

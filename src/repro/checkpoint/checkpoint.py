@@ -1,0 +1,74 @@
+"""Pytree checkpointing: npz payload + JSON structure manifest.
+
+Handles arbitrary nested dict/list/tuple trees of jnp arrays plus scalar
+leaves. Restores onto the host; sharded restore re-shards via the caller's
+``jax.device_put`` with the target sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: Dict = None
+                    ) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    items, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"leaf_{i}"
+        # npz cannot hold bf16: store raw bits + dtype tag
+        if arr.dtype == jax.numpy.bfloat16:
+            arrays[name] = arr.view(np.uint16)
+            manifest["leaves"].append({"key": key, "name": name,
+                                       "dtype": "bfloat16"})
+        else:
+            arrays[name] = arr
+            manifest["leaves"].append({"key": key, "name": name,
+                                       "dtype": str(arr.dtype)})
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, tree_like) -> Tuple[Any, int]:
+    """Restore into the structure of ``tree_like``. Returns (tree, step)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path)
+    by_key = {}
+    for leaf in manifest["leaves"]:
+        arr = data[leaf["name"]]
+        if leaf["dtype"] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        by_key[leaf["key"]] = arr
+    items, treedef = _flatten_with_paths(tree_like)
+    leaves = []
+    for key, like in items:
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_key[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {like.shape}")
+        leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

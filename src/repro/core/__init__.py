@@ -1,0 +1,5 @@
+# The paper's primary contribution: energy-efficient split learning for
+# LLM fine-tuning — cost model (Sec. III), CARD (Sec. IV), the SL protocol
+# (Sec. II-B stages 1-5) and its real JAX split execution (jax.vjp boundary).
+from repro.core import (card, channel, cost_model, hardware, protocol,
+                        scheduler, splitting)  # noqa: F401

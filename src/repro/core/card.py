@@ -1,0 +1,108 @@
+"""CARD — Cut lAyer and computing Resource Decision (Alg. 1, Sec. IV).
+
+  P2 -> (upper layer) closed-form server frequency, Eq. (16):
+      f* = clip(Q, F_min^{m,S}, F_max^S),
+      Q  = cbrt( w (E_max - E_min) / (2 xi (1-w) (D_max - D_min)) )
+  P2 -> (lower layer) brute-force over c in {0..I}: O(I).
+
+Baselines from Sec. V-B:
+  server-only — c = 0 (device runs only the embedding module);
+  device-only — c = I (device runs embedding + all decoders);
+plus static-cut and random-cut baselines for wider comparison.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import RoundContext
+
+
+@dataclass(frozen=True)
+class Decision:
+    cut: int
+    frequency: float
+    cost: float
+    delay: float
+    energy: float
+
+
+def optimal_frequency(ctx: RoundContext) -> float:
+    """Eq. (16). Note Q is independent of c — the frequency subproblem and
+    the cut subproblem decouple exactly as the paper exploits."""
+    d_min, d_max, e_min, e_max = ctx.corners()
+    w, xi = ctx.sim.w, ctx.sim.xi
+    if w >= 1.0:
+        return ctx.server.f_max
+    q = ((w * (e_max - e_min))
+         / (2.0 * xi * (1.0 - w) * max(d_max - d_min, 1e-12))) ** (1.0 / 3.0)
+    return float(np.clip(q, ctx.f_min(), ctx.server.f_max))
+
+
+def _evaluate(ctx: RoundContext, cut: int, f: float, corners) -> Decision:
+    return Decision(cut=cut, frequency=f,
+                    cost=ctx.cost(cut, f, corners),
+                    delay=ctx.round_delay(cut, f),
+                    energy=ctx.server_energy(cut, f))
+
+
+def card(ctx: RoundContext, *, respect_memory: bool = True) -> Decision:
+    """Alg. 1: f* once (line 1), then brute-force c (lines 3-9)."""
+    corners = ctx.corners()
+    f_star = optimal_frequency(ctx)
+    max_cut = (ctx.max_feasible_cut() if respect_memory
+               else ctx.workload.cfg.n_layers)
+    best: Optional[Decision] = None
+    for c in range(0, max_cut + 1):
+        cand = _evaluate(ctx, c, f_star, corners)
+        if best is None or cand.cost < best.cost:
+            best = cand
+    assert best is not None
+    return best
+
+
+def card_joint_bruteforce(ctx: RoundContext, *, n_freq: int = 200,
+                          respect_memory: bool = True) -> Decision:
+    """Exhaustive (f, c) grid — the optimality oracle for tests."""
+    corners = ctx.corners()
+    freqs = np.linspace(ctx.f_min(), ctx.server.f_max, n_freq)
+    max_cut = (ctx.max_feasible_cut() if respect_memory
+               else ctx.workload.cfg.n_layers)
+    best: Optional[Decision] = None
+    for c in range(0, max_cut + 1):
+        for f in freqs:
+            cand = _evaluate(ctx, c, float(f), corners)
+            if best is None or cand.cost < best.cost:
+                best = cand
+    assert best is not None
+    return best
+
+
+# --- Benchmarks (Sec. V-B) ---------------------------------------------------
+
+
+def server_only(ctx: RoundContext) -> Decision:
+    """Devices fine-tune the embedding module only; server does the rest.
+    Server runs flat out (no energy-aware DVFS) — the energy-hungry baseline."""
+    return _evaluate(ctx, 0, ctx.server.f_max, ctx.corners())
+
+
+def device_only(ctx: RoundContext) -> Decision:
+    """Devices fine-tune embedding + all transformer decoders locally."""
+    # device-only ignores the memory mask: that is precisely its weakness
+    cut = ctx.workload.cfg.n_layers
+    return _evaluate(ctx, cut, ctx.f_min(), ctx.corners())
+
+
+def static_cut(ctx: RoundContext, cut: int) -> Decision:
+    """Fixed split (the 'static strategies' the paper argues against)."""
+    f_star = optimal_frequency(ctx)
+    return _evaluate(ctx, cut, f_star, ctx.corners())
+
+
+def random_cut(ctx: RoundContext, rng: np.random.Generator) -> Decision:
+    cut = int(rng.integers(0, ctx.workload.cfg.n_layers + 1))
+    return static_cut(ctx, cut)

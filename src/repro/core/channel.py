@@ -1,0 +1,99 @@
+"""Wireless channel model: pathloss -> SNR -> CQI -> MCS spectral efficiency.
+
+The paper (Sec. III-A-2) converts SNR to rate via the 3GPP TS 38.214 CQI->MCS
+mapping: ``R = B * y(SNR)`` where ``y`` is the spectral efficiency of the
+highest CQI whose SNR threshold is met. Channel states Good/Normal/Poor are
+pathloss exponents 2/4/6 (Sec. V-B).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+# 3GPP TS 38.214 Table 5.2.2.1-2 (4-bit CQI, 64QAM): spectral efficiency and
+# the commonly used SNR switching thresholds (dB) from link-level curves.
+CQI_EFFICIENCY = (
+    0.1523, 0.2344, 0.3770, 0.6016, 0.8770, 1.1758, 1.4766, 1.9141,
+    2.4063, 2.7305, 3.3223, 3.9023, 4.5234, 5.1152, 5.5547,
+)
+CQI_SNR_THRESH_DB = (
+    -6.7, -4.7, -2.3, 0.2, 2.4, 4.3, 5.9, 8.1,
+    10.3, 11.7, 14.1, 16.3, 18.7, 21.0, 22.7,
+)
+
+PATHLOSS_EXPONENT = {"good": 2.0, "normal": 4.0, "poor": 6.0}
+
+
+def snr_to_efficiency(snr_db: float) -> float:
+    """y(SNR): highest CQI whose threshold is met (0 below CQI-1)."""
+    eff = 0.0
+    for thresh, e in zip(CQI_SNR_THRESH_DB, CQI_EFFICIENCY):
+        if snr_db >= thresh:
+            eff = e
+    return eff
+
+
+def pathloss_db(distance_m: float, exponent: float, *,
+                ref_loss_db: float = 30.0, ref_dist_m: float = 1.0) -> float:
+    return ref_loss_db + 10.0 * exponent * math.log10(
+        max(distance_m, ref_dist_m) / ref_dist_m)
+
+
+@dataclass
+class ChannelState:
+    """Per-(device, round) link realization."""
+    snr_up_db: float
+    snr_down_db: float
+    bandwidth_hz: float
+
+    @property
+    def rate_up(self) -> float:      # R^D in the paper, bits/s
+        # floor at CQI-1 (lowest MCS with HARQ retransmission) to avoid outage
+        return self.bandwidth_hz * max(snr_to_efficiency(self.snr_up_db),
+                                       CQI_EFFICIENCY[0])
+
+    @property
+    def rate_down(self) -> float:    # R^S
+        return self.bandwidth_hz * max(snr_to_efficiency(self.snr_down_db),
+                                       CQI_EFFICIENCY[0])
+
+
+class WirelessChannel:
+    """Draws per-round channel states with Rayleigh block fading."""
+
+    def __init__(self, state: str = "normal", *, distance_m: float = 35.0,
+                 bandwidth_hz: float = 20e6, tx_power_dbm_up: float = 23.0,
+                 tx_power_dbm_down: float = 30.0,
+                 noise_dbm_per_hz: float = -174.0, fading: bool = True,
+                 seed: int = 0):
+        if state not in PATHLOSS_EXPONENT:
+            raise ValueError(f"channel state must be one of {list(PATHLOSS_EXPONENT)}")
+        self.state = state
+        self.exponent = PATHLOSS_EXPONENT[state]
+        self.distance_m = distance_m
+        self.bandwidth_hz = bandwidth_hz
+        self.tx_up = tx_power_dbm_up
+        self.tx_down = tx_power_dbm_down
+        self.noise_dbm = noise_dbm_per_hz + 10 * math.log10(bandwidth_hz)
+        self.fading = fading
+        self.rng = np.random.default_rng(seed)
+
+    def mean_snr_db(self, uplink: bool) -> float:
+        tx = self.tx_up if uplink else self.tx_down
+        return tx - pathloss_db(self.distance_m, self.exponent) - self.noise_dbm
+
+    def draw(self) -> ChannelState:
+        """One block-fading realization (fixed within a training round)."""
+        if self.fading:
+            # Rayleigh: |h|^2 ~ Exp(1) -> dB offset
+            g_up = 10 * math.log10(max(self.rng.exponential(1.0), 1e-6))
+            g_dn = 10 * math.log10(max(self.rng.exponential(1.0), 1e-6))
+        else:
+            g_up = g_dn = 0.0
+        return ChannelState(
+            snr_up_db=self.mean_snr_db(True) + g_up,
+            snr_down_db=self.mean_snr_db(False) + g_dn,
+            bandwidth_hz=self.bandwidth_hz)

@@ -1,0 +1,231 @@
+"""Analytic delay/energy model — Sec. III of the paper, per architecture.
+
+All quantities are derived from the ``ModelConfig`` so the cost model works
+for every assigned architecture, not just the paper's LLaMA-1B:
+
+  eta_D(c)   — FLOPs of the device-side stage at cut layer c (Eq. 7 numerator)
+  eta        — FLOPs of the whole fine-tuning step (Eq. 8)
+  S(c), S~(c) — smashed data / gradient bytes (Eq. 9); identical across cuts
+                for uniform layer stacks (the paper's Fig. 3 observation)
+  A(c)       — device-side LoRA adapter bytes (Eq. 9)
+  D_{m,n}    — Eq. 10;  E_{m,n} — Eq. 11;  U — Eq. 12.
+
+FLOPs accounting: LoRA fine-tuning needs forward + backward-through-frozen
+weights (dX GEMMs) + adapter-gradient GEMMs, i.e. ~2x forward FLOPs + the
+(negligible) adapter terms; we count them exactly below. MoE layers count
+*active* FLOPs (top-k + shared experts) — this breaks the paper's
+"every layer costs the same" symmetry only across families, not within a
+uniform stack, so Fig. 3's bimodal-cut finding is preserved per-arch.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.channel import ChannelState
+from repro.core.hardware import DeviceProfile, SimParams
+
+
+# ---------------------------------------------------------------------------
+# FLOPs per component (forward, per token)
+# ---------------------------------------------------------------------------
+
+
+def attn_fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    if cfg.is_attention_free:
+        return 0.0
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    proj = 2 * d * (q + 2 * kv) + 2 * q * d
+    # causal scores + weighted sum: 2 * 2 * (S/2) * q_dim
+    scores = 2 * seq_len * q  # (2 matmuls x S x q_dim x ... / 2 causal)
+    return proj + scores
+
+
+def mlp_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    if cfg.is_moe:
+        routed = 2 * 3 * d * cfg.d_ff * cfg.top_k
+        shared = 2 * 3 * d * cfg.d_ff * cfg.n_shared_experts
+        router = 2 * d * cfg.n_experts
+        return routed + shared + router
+    if cfg.family == "ssm":
+        return 0.0
+    return 2 * 3 * d * cfg.d_ff
+
+
+def ssm_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    if not cfg.has_ssm:
+        return 0.0
+    d, di, ns = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    proj = 2 * d * (2 * di + 2 * ns + cfg.ssm_n_heads) + 2 * di * d
+    conv = 2 * cfg.ssm_conv_width * (di + 2 * ns)
+    # SSD: intra-chunk quadratic (~2*chunk*di) + state update (~4*di*ns)
+    ssd = 2 * cfg.ssm_chunk * di + 4 * di * ns
+    return proj + conv + ssd
+
+
+def lora_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    return 2 * cfg.lora_params_per_layer()
+
+
+def layer_fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    return (attn_fwd_flops_per_token(cfg, seq_len)
+            + mlp_fwd_flops_per_token(cfg)
+            + ssm_fwd_flops_per_token(cfg)
+            + lora_fwd_flops_per_token(cfg))
+
+
+def embed_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    return 2 * cfg.d_model  # lookup + scale; head counted server-side
+
+
+def head_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    return 2 * cfg.d_model * cfg.vocab_size
+
+
+# LoRA training ~= 2x forward (dX GEMMs through frozen weights) + adapter
+# gradient GEMMs (~= forward cost of the adapters themselves).
+LORA_TRAIN_FACTOR = 2.0
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One mini-batch fine-tuning step of (batch x seq) tokens."""
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq_len
+
+    # ---- eta(c): Eq. 7/8 numerators ---------------------------------------
+    def device_flops(self, cut: int) -> float:
+        """eta_D(c): embedding + layers [0, cut), fwd+bwd, LoRA-frozen."""
+        per_tok = (embed_fwd_flops_per_token(self.cfg)
+                   + cut * layer_fwd_flops_per_token(self.cfg, self.seq_len))
+        return LORA_TRAIN_FACTOR * per_tok * self.tokens
+
+    def total_flops(self) -> float:
+        """eta: the whole model (device + server sides), fwd+bwd."""
+        cfg = self.cfg
+        per_tok = (embed_fwd_flops_per_token(cfg)
+                   + cfg.n_layers * layer_fwd_flops_per_token(cfg, self.seq_len)
+                   + head_fwd_flops_per_token(cfg))
+        return LORA_TRAIN_FACTOR * per_tok * self.tokens
+
+    def server_flops(self, cut: int) -> float:
+        return self.total_flops() - self.device_flops(cut)
+
+    # ---- data sizes: Eq. 9 -------------------------------------------------
+    def smashed_bytes(self, cut: int, act_bytes: int) -> float:
+        """S(c): activations at the cut + labels. Constant across cuts for a
+        uniform stack (matches the paper's observation)."""
+        acts = self.tokens * self.cfg.d_model * act_bytes
+        labels = self.tokens * 4
+        return acts + labels
+
+    def gradient_bytes(self, cut: int, act_bytes: int) -> float:
+        """S~(c): gradient of the smashed data."""
+        return self.tokens * self.cfg.d_model * act_bytes
+
+    def adapter_bytes(self, cut: int, adapter_bytes: int) -> float:
+        """A(c): device-side LoRA adapters for layers [0, cut)."""
+        return cut * self.cfg.lora_params_per_layer() * adapter_bytes
+
+    def device_weight_bytes(self, cut: int, weight_bytes: int = 2) -> float:
+        """Frozen backbone bytes resident on the device at cut c (for the
+        memory-feasibility mask; one-time download excluded from Eq. 9)."""
+        per_layer = self.cfg.params_per_layer() * weight_bytes
+        embed = self.cfg.vocab_size * self.cfg.d_model * weight_bytes
+        return embed + cut * per_layer
+
+
+# ---------------------------------------------------------------------------
+# Delay & energy (Eqs. 7-11)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundContext:
+    """Everything CARD needs for one (device, round) decision."""
+    workload: Workload
+    device: DeviceProfile
+    server: DeviceProfile
+    channel: ChannelState
+    sim: SimParams
+
+    # -- Eq. 7: device computation delay per local epoch
+    def device_comp_delay(self, cut: int) -> float:
+        return self.workload.device_flops(cut) / self.device.peak_flops
+
+    # -- Eq. 8: server computation delay per local epoch at frequency f
+    def server_comp_delay(self, cut: int, f: float) -> float:
+        return self.workload.server_flops(cut) / self.server.throughput(f)
+
+    # -- Eq. 9: total transmission delay for a round (bits / (bit/s))
+    def transmission_delay(self, cut: int) -> float:
+        w, sim, ch = self.workload, self.sim, self.channel
+        t = sim.local_epochs
+        up = 8 * sim.phi * w.smashed_bytes(cut, sim.act_bytes) / ch.rate_up
+        down = 8 * sim.phi * w.gradient_bytes(cut, sim.act_bytes) / ch.rate_down
+        adapters = (8 * w.adapter_bytes(cut, sim.adapter_bytes)
+                    * (1.0 / ch.rate_up + 1.0 / ch.rate_down))
+        return t * (up + down) + adapters
+
+    # -- Eq. 10: total round delay
+    def round_delay(self, cut: int, f: float) -> float:
+        t = self.sim.local_epochs
+        comp = t * (self.device_comp_delay(cut)
+                    + self.server_comp_delay(cut, f))
+        return comp + self.transmission_delay(cut)
+
+    # -- Eq. 11: server computational energy for the round
+    def server_energy(self, cut: int, f: float) -> float:
+        t = self.sim.local_epochs
+        return (t * self.sim.xi * f ** 2 * self.workload.server_flops(cut)
+                / (self.server.delta * self.server.sigma))
+
+    # -- feasibility: frozen device-side weights must fit device RAM
+    def max_feasible_cut(self) -> int:
+        cfg = self.workload.cfg
+        budget = 0.8 * self.device.mem_bytes
+        for c in range(cfg.n_layers, -1, -1):
+            if self.workload.device_weight_bytes(c) <= budget:
+                return c
+        return 0
+
+    # -- normalization corners (Sec. III-C):
+    #    D_max, E_min at (c=I, f=F_min);  D_min, E_max at (c=0, f=F_max)
+    def corners(self) -> Tuple[float, float, float, float]:
+        cfg = self.workload.cfg
+        f_min = self.f_min()
+        f_max = self.server.f_max
+        d_max = self.round_delay(cfg.n_layers, f_min)
+        e_min = self.server_energy(cfg.n_layers, f_min)   # = 0
+        d_min = self.round_delay(0, f_max)
+        e_max = self.server_energy(0, f_max)
+        return d_min, d_max, e_min, e_max
+
+    def f_min(self) -> float:
+        """F_min^{m,S} = f_m delta_m sigma_m / (delta_S sigma_S): the server
+        must be at least as fast as the device (Sec. III-C)."""
+        lower = (self.device.peak_flops
+                 / (self.server.delta * self.server.sigma))
+        return max(lower, self.server.f_min)
+
+    # -- Eq. 12: scalarized cost
+    def cost(self, cut: int, f: float,
+             corners: Optional[Tuple[float, float, float, float]] = None
+             ) -> float:
+        if corners is None:
+            corners = self.corners()
+        d_min, d_max, e_min, e_max = corners
+        w = self.sim.w
+        d = self.round_delay(cut, f)
+        e = self.server_energy(cut, f)
+        dn = (d - d_min) / max(d_max - d_min, 1e-12)
+        en = (e - e_min) / max(e_max - e_min, 1e-12)
+        return w * dn + (1 - w) * en

@@ -1,0 +1,99 @@
+"""Hardware profiles: the paper's edge fleet (Table I), simulation constants
+(Table II), and the TPU-v5e server profile used for the multi-pod mapping.
+
+The paper's throughput model: a processor sustains ``f * delta * sigma``
+FLOP/s (GPU frequency x FLOPs/core/cycle x cores), Eq. (7)-(8). Server power
+is cubic in frequency, ``P = xi * f^3`` (Sec. III-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Tuple
+
+GIGA = 1e9
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """An edge device (or the server) in the paper's cost model."""
+    name: str
+    platform: str
+    f_max: float          # max GPU frequency, Hz
+    delta: float          # FLOPs per core per cycle
+    sigma: int            # cores
+    f_min: float = 0.0    # min frequency (server DVFS lower bound)
+    xi: float = 1e-25     # power coefficient, Watt/(cycle/s)^3 (server only)
+    mem_bytes: float = 8e9  # device RAM (feasibility mask for huge backbones)
+
+    @property
+    def peak_flops(self) -> float:
+        return self.f_max * self.delta * self.sigma
+
+    def throughput(self, f: float) -> float:
+        return f * self.delta * self.sigma
+
+    def power(self, f: float) -> float:
+        return self.xi * f ** 3
+
+
+# --- Table I ---------------------------------------------------------------
+
+SERVER_RTX4060TI = DeviceProfile(
+    name="server", platform="Nvidia RTX 4060Ti",
+    f_max=2.46 * GIGA, delta=2.0, sigma=3072, f_min=0.3 * GIGA,
+    xi=1e-25, mem_bytes=16e9)
+
+EDGE_FLEET: Tuple[DeviceProfile, ...] = (
+    DeviceProfile("device1", "Jetson AGX Orin", 1.3 * GIGA, 2.0, 2048,
+                  mem_bytes=32e9),
+    DeviceProfile("device2", "Jetson AGX Orin", 1.0 * GIGA, 2.0, 2048,
+                  mem_bytes=32e9),
+    DeviceProfile("device3", "Jetson AGX Orin", 0.7 * GIGA, 2.0, 1792,
+                  mem_bytes=16e9),
+    DeviceProfile("device4", "Jetson Orin NX", 0.7 * GIGA, 2.0, 1024,
+                  mem_bytes=8e9),
+    DeviceProfile("device5", "Jetson AGX Nano", 0.5 * GIGA, 2.0, 512,
+                  mem_bytes=4e9),
+)
+
+# --- TPU v5e server profile (multi-pod mapping, DESIGN.md §3) --------------
+# The paper's continuous f^S maps to allocated server throughput. One v5e
+# chip: 197 TFLOP/s bf16. We express it in the same (f, delta, sigma) algebra
+# so CARD's closed form applies unchanged.
+
+TPU_V5E_CHIP = DeviceProfile(
+    name="tpu-v5e", platform="TPU v5e chip",
+    f_max=0.94 * GIGA, delta=8.0, sigma=26_214,  # 0.94e9*8*26214 ~= 197e12
+    f_min=0.1 * GIGA, xi=2.4e-25, mem_bytes=16e9)
+
+TPU_V5E_HBM_BW = 819e9        # bytes/s
+TPU_V5E_ICI_BW = 50e9         # bytes/s per link
+TPU_V5E_PEAK_BF16 = 197e12    # FLOP/s
+
+
+def tpu_pod_profile(chips: int) -> DeviceProfile:
+    """A pod slice as one 'server' in the paper's algebra."""
+    return replace(TPU_V5E_CHIP, name=f"tpu-v5e-x{chips}",
+                   sigma=TPU_V5E_CHIP.sigma * chips,
+                   mem_bytes=16e9 * chips)
+
+
+# --- Table II ---------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimParams:
+    xi: float = 1e-25          # server power coefficient
+    w: float = 0.2             # delay weight in Eq. (12)
+    local_epochs: int = 5      # T_{m,n}
+    phi: float = 0.1           # smashed-data/gradient compression ratio
+    act_bytes: int = 2         # bf16 activations
+    adapter_bytes: int = 4     # fp32 LoRA adapters
+    bandwidth_hz: float = 20e6           # per-device allocation
+    tx_power_dbm_up: float = 23.0        # device uplink
+    tx_power_dbm_down: float = 30.0      # AP downlink
+    noise_dbm_per_hz: float = -174.0
+    mini_batch: int = 4
+    seq_len: int = 512
+
+
+DEFAULT_SIM = SimParams()

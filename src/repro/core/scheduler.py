@@ -1,0 +1,130 @@
+"""Decision-level fleet simulator (no JAX execution) — used for the paper's
+figures, which need many rounds x devices x policies cheaply.
+
+``simulate_fleet`` reproduces the experiment grid of Sec. V: per round, per
+device, draw a channel state, run the policy, log (cut, f, delay, energy).
+The numbers feed Fig. 3 / Fig. 4 style benchmarks and the EXPERIMENTS.md
+validation against the paper's 70.8% / 53.1% claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import card as card_lib
+from repro.core.channel import WirelessChannel
+from repro.core.cost_model import RoundContext, Workload
+from repro.core.hardware import (DEFAULT_SIM, EDGE_FLEET, SERVER_RTX4060TI,
+                                 DeviceProfile, SimParams)
+
+
+@dataclasses.dataclass
+class FleetLog:
+    policy: str
+    channel_state: str
+    rounds: int
+    device_names: List[str]
+    cuts: np.ndarray        # (rounds, devices)
+    freqs: np.ndarray       # (rounds, devices) Hz
+    delays: np.ndarray      # (rounds, devices) s
+    energies: np.ndarray    # (rounds, devices) J
+
+    def mean_delay(self) -> float:
+        return float(self.delays.mean())
+
+    def mean_energy(self) -> float:
+        return float(self.energies.mean())
+
+
+def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
+                   channel_state: str = "normal", rounds: int = 50,
+                   devices: Sequence[DeviceProfile] = EDGE_FLEET,
+                   server: DeviceProfile = SERVER_RTX4060TI,
+                   sim: SimParams = DEFAULT_SIM, seed: int = 0,
+                   static_cut: Optional[int] = None,
+                   respect_memory: bool = True) -> FleetLog:
+    rng = np.random.default_rng(seed)
+    channels = [WirelessChannel(channel_state, seed=seed + 31 * m,
+                                bandwidth_hz=sim.bandwidth_hz,
+                                tx_power_dbm_up=sim.tx_power_dbm_up,
+                                tx_power_dbm_down=sim.tx_power_dbm_down,
+                                noise_dbm_per_hz=sim.noise_dbm_per_hz)
+                for m in range(len(devices))]
+    workload = Workload(cfg, sim.mini_batch, sim.seq_len)
+    nd = len(devices)
+    cuts = np.zeros((rounds, nd), np.int32)
+    freqs = np.zeros((rounds, nd))
+    delays = np.zeros((rounds, nd))
+    energies = np.zeros((rounds, nd))
+    for n in range(rounds):
+        for m, dev in enumerate(devices):
+            ctx = RoundContext(workload=workload, device=dev, server=server,
+                               channel=channels[m].draw(), sim=sim)
+            if policy == "card":
+                d = card_lib.card(ctx, respect_memory=respect_memory)
+            elif policy == "server_only":
+                d = card_lib.server_only(ctx)
+            elif policy == "device_only":
+                d = card_lib.device_only(ctx)
+            elif policy == "static":
+                assert static_cut is not None
+                d = card_lib.static_cut(ctx, static_cut)
+            elif policy == "random":
+                d = card_lib.random_cut(ctx, rng)
+            else:
+                raise ValueError(f"unknown policy {policy!r}")
+            cuts[n, m] = d.cut
+            freqs[n, m] = d.frequency
+            delays[n, m] = d.delay
+            energies[n, m] = d.energy
+    return FleetLog(policy=policy, channel_state=channel_state, rounds=rounds,
+                    device_names=[d.name for d in devices], cuts=cuts,
+                    freqs=freqs, delays=delays, energies=energies)
+
+
+def parallel_round_stats(log: FleetLog, server: DeviceProfile = SERVER_RTX4060TI,
+                         sim: SimParams = DEFAULT_SIM) -> Dict[str, float]:
+    """Beyond-paper extension (the paper's cited future work, cf. Wu et al.
+    JSAC'23 parallel SL): all M devices train concurrently and the server
+    splits its compute among them.
+
+    The paper's protocol is sequential — round time = sum over devices. In
+    the parallel variant each device's server-side share runs at f*/M
+    effective throughput (cubic power => same energy per unit work at fixed
+    f), so:
+
+      T_seq  = sum_m D_m
+      T_par  = max_m D_m(fـeff = f*_m / M-share)
+
+    We approximate the M-way server share by scaling each device's
+    server-compute delay by M (worst case, no pipelining credit).
+    """
+    m = len(log.device_names)
+    t_seq = float(log.delays.sum(axis=1).mean())
+    # without per-component breakdown we bound: server-side <= whole delay
+    # at c=0 -> parallel upper bound scales delays by M then takes max
+    t_par_ub = float(np.max(log.delays * m, axis=1).mean())
+    # lower bound: perfect overlap of communication/device compute
+    t_par_lb = float(np.max(log.delays, axis=1).mean())
+    return {"sequential_s": t_seq, "parallel_upper_s": t_par_ub,
+            "parallel_lower_s": t_par_lb,
+            "speedup_lb": t_seq / t_par_ub if t_par_ub else float("nan"),
+            "speedup_ub": t_seq / t_par_lb if t_par_lb else float("nan")}
+
+
+def compare_policies(cfg: ModelConfig, *, rounds: int = 50,
+                     channel_states: Sequence[str] = ("good", "normal", "poor"),
+                     seed: int = 0, sim: SimParams = DEFAULT_SIM
+                     ) -> Dict[str, Dict[str, FleetLog]]:
+    """The Fig. 4 grid: policy x channel state."""
+    out: Dict[str, Dict[str, FleetLog]] = {}
+    for policy in ("card", "server_only", "device_only"):
+        out[policy] = {}
+        for state in channel_states:
+            out[policy][state] = simulate_fleet(
+                cfg, policy=policy, channel_state=state, rounds=rounds,
+                seed=seed, sim=sim)
+    return out

@@ -1,0 +1,161 @@
+"""Split execution — the SL computation itself, in JAX (Sec. II-B stages 3-4).
+
+The device stage (embedding + layers [0,c) + its LoRA adapters) and the
+server stage (layers [c,I) + final norm + head + loss + its adapters) are
+separate jitted functions bridged by ``jax.vjp``:
+
+  device:  smashed = f_D(lora_D; x)                        (Eq. 2)
+  channel: smashed' = Q(smashed)         phi-compression (int8 quantization)
+  server:  loss, d(smashed'), grads_S = f_S(lora_S; smashed', y)   (Eq. 3-4)
+  channel: g' = Q(d smashed')
+  device:  grads_D = vjp_D(g')                              (Eq. 5)
+
+The compression is a straight-through int8 quantizer: the paper models phi
+as a data-size ratio on the link (Eq. 9); here it is also *executed* so the
+training dynamics include the quantization error.
+
+A cut is a static argument — each cut compiles its own pair of programs and
+``SplitExecutor`` memoizes them (cut changes at round granularity, Alg. 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.common import Params, softmax_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# Channel compression (phi)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def channel_compress(x: jax.Array, enabled: bool) -> jax.Array:
+    """Straight-through int8 round trip emulating the phi-compressed link."""
+    if not enabled:
+        return x
+    q, s = quantize_int8(x)
+    xq = dequantize_int8(q, s, x.dtype)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# Stage functions
+# ---------------------------------------------------------------------------
+
+
+def split_lora(lora: Params, cut: int) -> Tuple[Params, Params]:
+    """R = {R^D ; R^S} (Eq. 6, inverse): split adapters at the cut."""
+    dev = {"layers": model_lib.slice_layers(lora["layers"], 0, cut)}
+    n = jax.tree_util.tree_leaves(lora["layers"])[0].shape[0]
+    srv = {"layers": model_lib.slice_layers(lora["layers"], cut, n)}
+    return dev, srv
+
+
+def merge_lora(dev: Params, srv: Params) -> Params:
+    """Stage 5, Eq. 6: R = {R^{D,T} ; R^{S,T}}."""
+    merged = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0),
+        dev["layers"], srv["layers"])
+    return {"layers": merged}
+
+
+def device_forward(frozen: Params, lora_dev: Params, inputs: jax.Array,
+                   cfg: ModelConfig, cut: int, *, impl: str = "naive",
+                   compress: bool = True) -> jax.Array:
+    """Eq. 2: smashed data at the cut layer (embedding + layers [0,c))."""
+    if cut == 0:
+        x = model_lib.embed_inputs(frozen, inputs, cfg)
+    else:
+        lora_full = {"layers": lora_dev["layers"]}
+        x, _ = model_lib.forward_hidden(
+            frozen, lora_full, inputs, cfg, lo=0, hi=cut, impl=impl,
+            remat=False, lora_sliced=True)
+    return channel_compress(x, compress)
+
+
+def server_loss(frozen: Params, lora_srv: Params, smashed: jax.Array,
+                labels: jax.Array, cfg: ModelConfig, cut: int, *,
+                impl: str = "naive") -> jax.Array:
+    """Eq. 3 + loss: layers [c,I) + final norm + head + CE."""
+    if cut == cfg.n_layers:
+        x, aux = smashed, 0.0
+    else:
+        lora_full = {"layers": lora_srv["layers"]}
+        x, aux = model_lib.forward_hidden(
+            frozen, lora_full, smashed, cfg, lo=cut, hi=cfg.n_layers,
+            impl=impl, remat=False, inputs_embedded=True, lora_sliced=True)
+    logits = model_lib.logits_from_hidden(frozen, x, cfg)
+    return softmax_cross_entropy(logits, labels) + aux
+
+
+# ---------------------------------------------------------------------------
+# One split fine-tuning step (stages 3-4)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cut", "impl", "compress"))
+def split_grads(frozen: Params, lora_dev: Params, lora_srv: Params,
+                inputs: jax.Array, labels: jax.Array, *, cfg: ModelConfig,
+                cut: int, impl: str = "naive", compress: bool = True
+                ) -> Tuple[jax.Array, Params, Params]:
+    """Returns (loss, grads_dev, grads_srv) with the smashed-data gradient
+    crossing the (compressed) channel boundary — exactly stages 3-4."""
+    # --- device-side FP, with vjp captured for the later BP ----------------
+    def dev_fn(ld):
+        return device_forward(frozen, ld, inputs, cfg, cut, impl=impl,
+                              compress=compress)
+
+    smashed, dev_vjp = jax.vjp(dev_fn, lora_dev)
+
+    # --- uplink: smashed data + labels (compression already applied) -------
+    # --- server-side FP + BP ------------------------------------------------
+    def srv_fn(ls, sm):
+        return server_loss(frozen, ls, sm, labels, cfg, cut, impl=impl)
+
+    loss, srv_vjp = jax.vjp(srv_fn, lora_srv, smashed)
+    grads_srv, g_smashed = srv_vjp(jnp.ones((), loss.dtype))
+
+    # --- downlink: smashed-data gradient, phi-compressed --------------------
+    g_smashed = channel_compress(g_smashed, compress)
+
+    # --- device-side BP ------------------------------------------------------
+    (grads_dev,) = dev_vjp(g_smashed)
+    return loss, grads_dev, grads_srv
+
+
+class SplitExecutor:
+    """Caches compiled split programs per cut (Stage 1 re-splits per round)."""
+
+    def __init__(self, cfg: ModelConfig, *, impl: str = "naive",
+                 compress: bool = True):
+        self.cfg = cfg
+        self.impl = impl
+        self.compress = compress
+
+    def step(self, frozen: Params, lora: Params, batch: Dict[str, Any],
+             cut: int) -> Tuple[jax.Array, Params]:
+        """One local epoch: returns (loss, full-model LoRA grads)."""
+        lora_dev, lora_srv = split_lora(lora, cut)
+        inputs = (batch["embeds"] if self.cfg.input_mode == "embeds"
+                  else batch["tokens"])
+        loss, g_dev, g_srv = split_grads(
+            frozen, lora_dev, lora_srv, inputs, batch["labels"],
+            cfg=self.cfg, cut=cut, impl=self.impl, compress=self.compress)
+        return loss, merge_lora(g_dev, g_srv)

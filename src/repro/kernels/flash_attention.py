@@ -1,0 +1,124 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window, GQA-aware
+via the ops wrapper).
+
+Online-softmax over KV blocks. Grid: (batch*kv_heads*group, nq, nk) with the
+KV dimension innermost; the f32 accumulator and the running (m, l) statistics
+persist in VMEM scratch across the KV sweep (TPU grid execution is
+sequential). Causal/SWA masking is computed from block indices with
+broadcasted iota — fully-masked KV blocks are skipped with pl.when.
+
+Block sizes default to (block_q=512, block_k=512): q/k/v tiles of
+512x128 bf16 = 128 KiB each — comfortably within the ~16 MiB VMEM budget,
+MXU-aligned on both dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, window: int, block_q: int, block_k: int,
+            nk: int, sm_scale: float, skv_true: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos0 = qi * block_q
+    k_pos0 = ki * block_k
+    # block-level skip: KV block entirely in the future (causal), entirely
+    # behind the window, or entirely padding
+    run = k_pos0 < skv_true
+    if causal:
+        run = jnp.logical_and(run, k_pos0 <= q_pos0 + block_q - 1)
+    if window:
+        run = jnp.logical_and(run, k_pos0 + block_k - 1 > q_pos0 - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                       # (block_q, d)
+        k = k_ref[0]                       # (block_k, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+
+        q_pos = q_pos0 + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        k_pos = k_pos0 + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = k_pos < skv_true          # mask padded keys
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH, Skv, D). Positions are 0..S-1 (standard
+    train/prefill). GQA head-group folding happens in ops.flash_attention.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    pq, pk = (-sq) % bq, (-skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    sq_p, skv_p = q.shape[1], k.shape[1]
+    nq, nk = sq_p // bq, skv_p // bk
+    sm_scale = 1.0 / (d ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, window=window,
+                          block_q=bq, block_k=bk, nk=nk, sm_scale=sm_scale,
+                          skv_true=skv),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,116 @@
+"""Flash-decode Pallas TPU kernel: one-token GQA attention over a KV cache.
+
+The decode_32k/long_500k hot spot: q is (group, d) per kv-head — tiny — while
+k/v sweep a 32k-slot cache from HBM. The kernel streams KV blocks through
+VMEM with online softmax, exactly one HBM pass over the cache (the roofline
+lower bound for decode).
+
+Grid: (batch*kv_heads, n_kv_blocks); scratch (acc, m, l) persists across the
+KV sweep. The current position ``t`` arrives via scalar prefetch and masks
+cache slots: linear caches attend to slots <= t; SWA ring buffers mask by
+reconstructed absolute position t - ((t - j) mod W) (models/attention.py
+semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_k: int, nk: int, window: int, slots: int, sm_scale: float):
+    ki = pl.program_id(1)
+    t = t_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (group, d)
+    k = k_ref[0]                                   # (block_k, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    j = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                (1, block_k), 1)[0]
+    in_cache = j < slots                           # excludes block padding
+    if window and window <= slots:                 # ring buffer
+        abs_pos = t - ((t - j) % slots)
+        valid = in_cache & (abs_pos >= 0) & (abs_pos <= t) \
+            & (abs_pos > t - window)
+    else:                                          # linear cache
+        valid = in_cache & (j <= t)
+        if window:
+            valid &= j > t - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(p.astype(v.dtype), v,
+                                          (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, t: jax.Array, *,
+                 window: int = 0, block_k: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """q: (BH, G, D) one query token per kv-head group;
+    k, v: (BH, S, D) cache; t: scalar int32 current position.
+    Returns (BH, G, D)."""
+    bh, g, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    pad = (-s) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        # padded slots: j >= s -> for ring caches (t-j)%slots uses true slot
+        # count, so mask padded region via the linear-valid check below; we
+        # pass slots = s (true) and rely on abs_pos/j masks excluding j >= s
+        # only when t < j. To be exact, clamp by marking them invalid:
+    sp = k.shape[1]
+    nk = sp // bk
+    sm_scale = 1.0 / (d ** 0.5)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j, t_: (b, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, t_: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, t_: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j, t_: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=bk, nk=nk, window=window,
+                          slots=s, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+        interpret=interpret,
+    )(t_arr, q, k, v)
+    return out

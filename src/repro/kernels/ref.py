@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    scale: float = 1.0) -> jax.Array:
+    y = jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32)
+    xa = jnp.matmul(x, a.astype(x.dtype), preferred_element_type=jnp.float32)
+    y = y + scale * jnp.matmul(xa.astype(x.dtype), b.astype(x.dtype),
+                               preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH, Skv, D); positions = arange."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(xt: jax.Array, a: jax.Array, B: jax.Array,
+                        C: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for ssd_scan.ssd_intra_chunk. Shapes as the kernel."""
+    b, nc, cl, nh, hp = xt.shape
+    xt = xt.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    Bc = B.astype(jnp.float32)
+    Cc = C.astype(jnp.float32)
+    cum = jnp.cumsum(a, axis=2)                         # (b,nc,cl,nh)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xt)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    st = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dec_end, xt)
+    dec = jnp.stack([jnp.exp(cum),
+                     jnp.broadcast_to(jnp.exp(cum[:, :, -1:, :]),
+                                      cum.shape)], axis=-1)
+    return y, st, dec
+
+
+def ssd_full_ref(xt: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                 chunk: int) -> jax.Array:
+    """End-to-end SSD oracle — delegates to the model's shared impl."""
+    from repro.models.mamba import ssd_chunked
+    y, _ = ssd_chunked(xt, a, B, C, chunk)
+    return y

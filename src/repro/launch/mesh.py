@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 TPU-v5e chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is data-parallel across pods (each pod serves one group of edge
+devices in the SL deployment; DESIGN.md §3).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """A CPU-sized mesh for tests."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,71 @@
+"""Serving steps: prefill and single-token decode (KV/SSM cache).
+
+``serve_step`` is what the decode input shapes (decode_32k, long_500k)
+lower: ONE new token against a cache of ``seq_len``. For SWA variants the
+cache is a ring buffer of ``window`` slots (models/attention.py), which is
+what makes long_500k feasible for attention archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.common import Params
+
+
+def make_serve_step(cfg: ModelConfig, *, unroll: bool = False) -> Callable:
+    def serve_step(frozen: Params, lora: Optional[Params], cache: Params,
+                   inputs: jax.Array, t: jax.Array
+                   ) -> Tuple[jax.Array, Params]:
+        return model_lib.decode_step(frozen, lora, cache, inputs, t, cfg,
+                                     unroll=unroll)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl: str = "chunked",
+                      unroll: bool = False) -> Callable:
+    def prefill_step(frozen: Params, lora: Optional[Params],
+                     inputs: jax.Array) -> jax.Array:
+        logits, _ = model_lib.prefill(frozen, lora, inputs, cfg, impl=impl,
+                                      unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def generate(cfg: ModelConfig, frozen: Params, lora: Optional[Params],
+             prompt: jax.Array, max_new: int, *, temperature: float = 0.0,
+             key: Optional[jax.Array] = None) -> jax.Array:
+    """Greedy/sampled autoregressive generation (CPU-scale example driver).
+
+    prompt: (B, S0) tokens (or (B, S0, d) embeds). Returns (B, max_new)."""
+    b = prompt.shape[0]
+    s0 = prompt.shape[1]
+    cache = model_lib.init_cache(cfg, b, s0 + max_new)
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    # prefill token-by-token through the cache (exercises the decode path)
+    tok = None
+    for t in range(s0):
+        inp = prompt[:, t:t + 1]
+        logits, cache = serve_step(frozen, lora, cache, inp, jnp.int32(t))
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    for i in range(max_new):
+        out.append(tok)
+        logits, cache = serve_step(frozen, lora, cache, tok,
+                                   jnp.int32(s0 + i))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature
+                                         ).astype(jnp.int32)[:, None]
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,208 @@
+"""Sharding rules: parameter tree -> PartitionSpec tree, per architecture.
+
+Megatron-style tensor parallelism on the ``model`` axis, batch parallelism
+on ("pod", "data"), and 2D (expert x ffn) sharding for MoE expert weights so
+trillion-parameter configs fit per-chip HBM.
+
+Every rule is divisibility-guarded: if a dim is not divisible by the axis
+size the rule falls back (next candidate dim, then replication) instead of
+relying on GSPMD padding — keeps the compiled collective schedule clean.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+Params = Any
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def shard_dim_if(mesh: Mesh, shape: Tuple[int, ...], *rules) -> P:
+    """rules: (dim_index, axis). Apply each rule whose dim is divisible by
+    the axis size; skip otherwise."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim, axis in rules:
+        if axis is None:
+            continue
+        size = _axis_size(mesh, axis)
+        names = axis if isinstance(axis, tuple) else (axis,)
+        if any(n in used for n in names):
+            continue
+        if size > 1 and shape[dim] % size == 0 and spec[dim] is None:
+            spec[dim] = axis
+            used.update(names)
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params: Params, mesh: Mesh) -> Params:
+    """PartitionSpec tree matching ``params`` structure ({"frozen","lora"})."""
+    mdl = "model"
+    dp = data_axes(mesh)
+    moe_strategy = None
+    if cfg.is_moe:
+        from repro.models.moe_shard_map import strategy_for_mesh
+        moe_strategy = strategy_for_mesh(cfg, mesh)
+
+    def frozen_leaf_spec(path: Tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        shape = leaf.shape
+        stacked = path[0] == "layers"  # leading n_layers dim
+        off = 1 if stacked else 0
+
+        def sd(*rules) -> P:
+            shifted = [(d + off, ax) for d, ax in rules]
+            if stacked:
+                shifted = [(0, None)] + shifted
+            return shard_dim_if(mesh, shape, *shifted)
+
+        # --- embeddings / head ------------------------------------------
+        if name == "embed":
+            return shard_dim_if(mesh, shape, (0, mdl), (1, mdl))
+        if name == "head":
+            return shard_dim_if(mesh, shape, (1, mdl), (0, mdl))
+        # --- attention ----------------------------------------------------
+        if name in ("wq", "wk", "wv"):
+            return sd((1, mdl))
+        if name == "wo":
+            return sd((0, mdl))
+        if name in ("bq", "bk", "bv"):
+            return sd((0, mdl))
+        # --- dense MLP ------------------------------------------------------
+        if name in ("w_gate", "w_up") and len(shape) == 2 + off:
+            return sd((1, mdl))
+        if name == "w_down" and len(shape) == 2 + off:
+            return sd((0, mdl))
+        # --- MoE experts (layout must match moe_shard_map strategy) ---------
+        if name in ("w_gate", "w_up") and len(shape) == 3 + off:
+            if moe_strategy == "ep_a2a":
+                return sd((0, dp), (2, mdl))       # E over EP, f over TP
+            if moe_strategy == "replicated":
+                return sd()
+            return sd((0, mdl), (2, dp))           # GSPMD fallback
+        if name == "w_down" and len(shape) == 3 + off:
+            if moe_strategy == "ep_a2a":
+                return sd((0, dp), (1, mdl))
+            if moe_strategy == "replicated":
+                return sd()
+            return sd((0, mdl), (1, dp))
+        if name == "router":
+            return sd()                            # routing must be replicated
+        # shared expert (2D mats named like the dense MLP): TP over f under
+        # ep_a2a (matches moe_shard_map's shared_spec); replicated otherwise
+        if len(path) >= 2 and path[-2] == "shared" \
+                and moe_strategy == "replicated":
+            return sd()
+        # --- mamba: replicate projections (small; avoids split-boundary
+        #     collectives on the fused in_proj; DESIGN.md §3) ---------------
+        if name in ("in_proj", "out_proj", "conv_w", "conv_b", "dt_bias",
+                    "a_log", "d_skip", "gate_norm"):
+            return sd()
+        # --- norms / everything else: replicated ---------------------------
+        return sd()
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return frozen_leaf_spec(path, tree)
+
+    frozen_specs = walk(params["frozen"])
+
+    # LoRA: mirror the base matrix's output sharding where divisible
+    def lora_walk(tree, path=()):
+        if isinstance(tree, dict) and set(tree.keys()) == {"a", "b"}:
+            base = path[-1]
+            out_axis = mdl if base in ("wq", "wk", "wv", "w_gate", "w_up") \
+                else None
+            stacked_off = 1 if path[0] == "layers" else 0
+            a_spec = P(*([None] * (stacked_off + 2)))
+            b_shape = tree["b"].shape
+            rules = [(stacked_off + 1, out_axis)] if out_axis else []
+            b_spec = shard_dim_if(mesh, b_shape,
+                                  *([(0, None)] if stacked_off else []),
+                                  *rules)
+            return {"a": a_spec, "b": b_spec}
+        if isinstance(tree, dict):
+            return {k: lora_walk(v, path + (k,)) for k, v in tree.items()}
+        return P(*([None] * len(tree.shape)))
+
+    lora_specs = lora_walk(params["lora"])
+    return {"frozen": frozen_specs, "lora": lora_specs}
+
+
+def opt_state_specs(lora_specs: Params) -> Params:
+    """AdamW m/v mirror the param specs; step is replicated."""
+    return {"m": lora_specs, "v": lora_specs, "step": P()}
+
+
+def batch_specs_for(cfg: ModelConfig, mesh: Mesh, kind: str,
+                    global_batch: int = 0, cut: int = 0) -> Dict[str, P]:
+    dp = data_axes(mesh)
+    if global_batch and global_batch % _axis_size(mesh, dp) != 0:
+        dp = None  # e.g. long_500k: batch=1 cannot shard; TP-only
+    if kind == "train" and cut > 0:
+        return {"smashed": P(dp, None, None), "labels": P(dp, None)}
+    if cfg.input_mode == "embeds":
+        inputs = {"embeds": P(dp, None, None)}
+    else:
+        inputs = {"tokens": P(dp, None)}
+    if kind == "train":
+        inputs["labels"] = P(dp, None)
+    return inputs
+
+
+def cache_specs(cfg: ModelConfig, cache: Params, mesh: Mesh,
+                batch: int) -> Params:
+    """Decode caches: KV sharded (batch -> data, slots -> model) — the
+    sequence-sharded KV cache layout for long-context decode; SSM state
+    sharded (batch -> data, heads-or-headdim -> model)."""
+    dp = data_axes(mesh)
+    dp_or_none = dp if batch % _axis_size(mesh, dp) == 0 else None
+
+    def leaf_spec(path, leaf):
+        name = path[-1]
+        shape = leaf.shape  # leading n_layers dim
+        if name in ("k", "v", "k_scale", "v_scale"):
+            return shard_dim_if(mesh, shape, (1, dp_or_none), (2, "model"))
+        if name == "h":      # (L, B, nh, hp, ns)
+            return shard_dim_if(mesh, shape, (1, dp_or_none), (2, "model"),
+                                (3, "model"))
+        if name == "conv":   # (L, B, W-1, ch)
+            return shard_dim_if(mesh, shape, (1, dp_or_none), (3, "model"))
+        return P(*([None] * len(shape)))
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return leaf_spec(path, tree)
+
+    return walk(cache)
+
+
+def to_named(tree_specs: Params, mesh: Mesh) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def attach(avals: Params, shardings: Params) -> Params:
+    """ShapeDtypeStructs + shardings (dry-run inputs, no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        avals, shardings)

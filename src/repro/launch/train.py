@@ -1,0 +1,155 @@
+"""Training step factory + a runnable CPU-scale training driver.
+
+``make_train_step`` builds the full fine-tune step (forward + LoRA-only
+grads + AdamW update) that the multi-pod dry-run lowers; it is also what a
+real pod job would run as the *server side* of the SL deployment at the
+CARD cut (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models import model as model_lib
+from repro.models.common import Params
+from repro.optim import Optimizer, adamw, apply_updates, warmup_cosine
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    impl: str = "chunked", remat: bool = True,
+                    cut: int = 0, unroll: bool = False,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(frozen, lora, opt_state, batch) ->
+    (loss, new_lora, new_opt_state).
+
+    ``cut > 0`` lowers only the server-resident stage [cut, I) + head — the
+    device side runs on the edge fleet, so the pod job sees the smashed data
+    as its input (dry-run exercises this via --cut).
+
+    ``microbatches > 1`` splits the global batch and accumulates LoRA grads
+    in fp32 via lax.scan — divides peak activation/dispatch memory by the
+    microbatch count (required to fit kimi-k2 train_4k in 16 GB HBM chips).
+    """
+
+    def loss_fn(lora, frozen, batch):
+        if cut == 0:
+            return model_lib.forward_loss(frozen, lora, batch, cfg,
+                                          impl=impl, remat=remat,
+                                          unroll=unroll)
+        smashed = batch["smashed"]
+        x, aux = model_lib.forward_hidden(
+            frozen, lora, smashed, cfg, lo=cut, hi=cfg.n_layers,
+            impl=impl, remat=remat, inputs_embedded=True, unroll=unroll)
+        logits = model_lib.logits_from_hidden(frozen, x, cfg)
+        from repro.models.common import softmax_cross_entropy
+        return softmax_cross_entropy(logits, batch["labels"]) + aux
+
+    def train_step(frozen: Params, lora: Params, opt_state, batch
+                   ) -> Tuple[jax.Array, Params, Any]:
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(lora, frozen, batch)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb_batch):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(lora, frozen, mb_batch)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), grad_acc, g)
+                return (loss_acc + l, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), lora)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        updates, new_state = optimizer.update(grads, opt_state, lora)
+        new_lora = apply_updates(lora, updates)
+        return loss, new_lora, new_state
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# CPU-scale driver: fine-tune a reduced model for a few hundred steps
+# ---------------------------------------------------------------------------
+
+
+def run_training(arch: str = "llama32-1b", steps: int = 200,
+                 batch: int = 8, seq_len: int = 64, lr: float = 5e-3,
+                 log_every: int = 20, seed: int = 0,
+                 pretrain_steps: int = 60) -> Dict[str, Any]:
+    from repro.data import make_fleet_datasets
+
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.init_params(key, cfg)
+    # pretraining task != fine-tuning task (domain shift for the LoRA phase)
+    ds = make_fleet_datasets(cfg, 1, vocab=cfg.vocab_size, seed=seed)[0]
+    ft_ds = make_fleet_datasets(cfg, 1, vocab=cfg.vocab_size,
+                                seed=seed + 1000)[0]
+
+    # brief full-param pretraining so the frozen backbone is a real
+    # "pre-trained LLM" for the LoRA phase (paper Sec. II-A premise)
+    opt_full = adamw(warmup_cosine(3e-3, 10, pretrain_steps))
+    st = opt_full.init(params["frozen"])
+
+    @jax.jit
+    def pre_step(frozen, st, batch_):
+        def lf(fr):
+            return model_lib.forward_loss(fr, None, batch_, cfg,
+                                          impl="naive", remat=False)
+        loss, g = jax.value_and_grad(lf)(frozen)
+        upd, st2 = opt_full.update(g, st, frozen)
+        return apply_updates(frozen, upd), st2, loss
+
+    frozen = params["frozen"]
+    for _ in range(pretrain_steps):
+        b = {k: jnp.asarray(v) for k, v in ds.minibatch(batch, seq_len).items()}
+        frozen, st, pre_loss = pre_step(frozen, st, b)
+
+    optimizer = adamw(warmup_cosine(lr, 20, steps))
+    opt_state = optimizer.init(params["lora"])
+    step_fn = jax.jit(make_train_step(cfg, optimizer, impl="naive",
+                                      remat=False))
+    lora = params["lora"]
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in ft_ds.minibatch(batch, seq_len).items()}
+        loss, lora, opt_state = step_fn(frozen, lora, opt_state, b)
+        losses.append(float(loss))
+        if log_every and i % log_every == 0:
+            print(f"step {i:4d} loss {losses[-1]:.4f}")
+    return {"losses": losses, "pretrain_loss": float(pre_loss),
+            "steps_per_sec": steps / (time.time() - t0), "lora": lora,
+            "frozen": frozen, "cfg": cfg}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama32-1b")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=64)
+    p.add_argument("--lr", type=float, default=5e-3)
+    args = p.parse_args()
+    out = run_training(args.arch, args.steps, args.batch, args.seq_len,
+                       args.lr)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"({out['steps_per_sec']:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Production training loop: jitted step + periodic eval + checkpointing
+with resume + JSONL metrics. The server-side counterpart of the SL protocol
+for long-running pod jobs (the protocol drives rounds; the Trainer owns the
+optimizer state, checkpoints and metrics stream).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.launch.train import make_train_step
+from repro.models import model as model_lib
+from repro.models.common import Params
+from repro.optim import Optimizer, adamw, warmup_cosine
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 200
+    batch: int = 8
+    seq_len: int = 64
+    lr: float = 3e-3
+    warmup: int = 20
+    eval_every: int = 50
+    eval_batches: int = 4
+    checkpoint_every: int = 100
+    checkpoint_dir: Optional[str] = None
+    microbatches: int = 1
+    impl: str = "naive"
+    remat: bool = False
+    log_path: Optional[str] = None
+
+
+class Trainer:
+    """Owns (lora, opt_state); the frozen backbone is read-only."""
+
+    def __init__(self, cfg: ModelConfig, frozen: Params, lora: Params,
+                 tcfg: TrainerConfig, *,
+                 optimizer: Optional[Optimizer] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.frozen = frozen
+        self.lora = lora
+        self.optimizer = optimizer or adamw(
+            warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps))
+        self.opt_state = self.optimizer.init(lora)
+        self.step = 0
+        self.metrics: List[Dict] = []
+        self._train_step = jax.jit(make_train_step(
+            cfg, self.optimizer, impl=tcfg.impl, remat=tcfg.remat,
+            microbatches=tcfg.microbatches))
+        self._eval_loss = jax.jit(
+            lambda fr, lo, b: model_lib.forward_loss(
+                fr, lo, b, cfg, impl=tcfg.impl, remat=False))
+
+    # --- checkpointing ------------------------------------------------------
+
+    def _ckpt_path(self) -> Optional[str]:
+        d = self.tcfg.checkpoint_dir
+        return os.path.join(d, "trainer.npz") if d else None
+
+    def save(self) -> None:
+        path = self._ckpt_path()
+        if not path:
+            return
+        save_checkpoint(path, {"lora": self.lora,
+                               "opt_state": self.opt_state},
+                        step=self.step)
+
+    def restore(self) -> bool:
+        path = self._ckpt_path()
+        if not path or not os.path.exists(path):
+            return False
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {"lora": self.lora, "opt_state": self.opt_state})
+        tree, step = load_checkpoint(path, like)
+        self.lora = tree["lora"]
+        self.opt_state = tree["opt_state"]
+        self.step = step
+        return True
+
+    # --- loop -----------------------------------------------------------------
+
+    def _log(self, rec: Dict) -> None:
+        rec["step"] = self.step
+        rec["time"] = time.time()
+        self.metrics.append(rec)
+        if self.tcfg.log_path:
+            with open(self.tcfg.log_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    def evaluate(self, eval_batches: List[Dict[str, Any]]) -> float:
+        losses = [float(self._eval_loss(self.frozen, self.lora,
+                                        {k: jnp.asarray(v)
+                                         for k, v in b.items()}))
+                  for b in eval_batches]
+        return sum(losses) / max(len(losses), 1)
+
+    def train(self, next_batch: Callable[[], Dict[str, Any]],
+              eval_batches: Optional[List[Dict[str, Any]]] = None) -> Dict:
+        t = self.tcfg
+        t0 = time.time()
+        while self.step < t.steps:
+            batch = {k: jnp.asarray(v) for k, v in next_batch().items()}
+            loss, self.lora, self.opt_state = self._train_step(
+                self.frozen, self.lora, self.opt_state, batch)
+            self.step += 1
+            if self.step % 10 == 0 or self.step == 1:
+                self._log({"kind": "train", "loss": float(loss)})
+            if eval_batches and t.eval_every \
+                    and self.step % t.eval_every == 0:
+                self._log({"kind": "eval",
+                           "loss": self.evaluate(eval_batches)})
+            if t.checkpoint_every and self.step % t.checkpoint_every == 0:
+                self.save()
+        self.save()
+        train_losses = [m["loss"] for m in self.metrics
+                        if m["kind"] == "train"]
+        return {"final_loss": train_losses[-1] if train_losses else None,
+                "steps_per_sec": self.step / max(time.time() - t0, 1e-9),
+                "metrics": self.metrics}

@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, common, mamba, mlp, model, moe  # noqa: F401

@@ -1,0 +1,128 @@
+"""Per-family layer blocks (pre-norm residual), stacked for lax.scan."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import Params, init_rms_norm, rms_norm
+
+ATTN_FAMILIES = ("dense", "moe", "hybrid", "audio", "vlm")
+
+
+def init_layer(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": init_rms_norm(cfg.d_model)}
+    if cfg.family == "ssm":
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg, dtype)
+        return p
+    p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    p["norm2"] = init_rms_norm(cfg.d_model)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = mamba_mod.init_mamba(ks[2], cfg, dtype)
+    return p
+
+
+def init_layer_lora(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {}
+    if cfg.family == "ssm":
+        p["mamba"] = mamba_mod.init_mamba_lora(ks[0], cfg)
+        return p
+    p["attn"] = attn_mod.init_attention_lora(ks[0], cfg)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe_lora(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_mod.init_mlp_lora(ks[1], cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = mamba_mod.init_mamba_lora(ks[2], cfg)
+    return p
+
+
+def layer_forward(params: Params, lora: Optional[Params], x: jax.Array,
+                  cfg: ModelConfig, *, positions: jax.Array,
+                  impl: str = "chunked", use_lora_kernel: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    lget = (lambda k: lora.get(k) if lora is not None else None)
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if cfg.family == "ssm":
+        x = x + mamba_mod.mamba_forward(params["mamba"], lget("mamba"), h, cfg,
+                                        use_lora_kernel)
+        return x, aux
+    attn_out, _ = attn_mod.attention_forward(
+        params["attn"], lget("attn"), h, cfg, positions=positions, impl=impl,
+        use_lora_kernel=use_lora_kernel)
+    if cfg.family == "hybrid":
+        ssm_out = mamba_mod.mamba_forward(params["mamba"], lget("mamba"), h,
+                                          cfg, use_lora_kernel)
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + attn_out
+    h2 = rms_norm(x, params["norm2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        moe_out, aux = _moe_dispatch(params["moe"], lget("moe"), h2, cfg,
+                                     use_lora_kernel)
+        x = x + moe_out
+    else:
+        x = x + mlp_mod.mlp_forward(params["mlp"], lget("mlp"), h2, cfg,
+                                    use_lora_kernel)
+    return x, aux
+
+
+def _moe_dispatch(params: Params, lora, h: jax.Array, cfg: ModelConfig,
+                  use_lora_kernel: bool):
+    """Route to the shard_map expert-parallel path when a mesh is active."""
+    from repro.models import moe_shard_map
+    strategy = moe_shard_map.select_strategy(cfg)
+    if strategy is not None:
+        return moe_shard_map.moe_forward_dist(params, lora, h, cfg, strategy)
+    return moe_mod.moe_forward(params, lora, h, cfg, use_lora_kernel)
+
+
+def init_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    c: Params = {}
+    if cfg.family != "ssm":
+        c["kv"] = attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    if cfg.has_ssm:
+        c["ssm"] = mamba_mod.init_ssm_cache(cfg, batch, dtype)
+    return c
+
+
+def layer_decode(params: Params, lora: Optional[Params], x: jax.Array,
+                 cache: Params, cfg: ModelConfig, *, t: jax.Array
+                 ) -> Tuple[jax.Array, Params]:
+    """One-token decode through a layer. x: (B,1,d)."""
+    lget = (lambda k: lora.get(k) if lora is not None else None)
+    new_cache: Params = {}
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if cfg.family == "ssm":
+        out, new_cache["ssm"] = mamba_mod.mamba_decode(
+            params["mamba"], lget("mamba"), h, cache["ssm"], cfg)
+        return x + out, new_cache
+    attn_out, new_cache["kv"] = attn_mod.attention_decode(
+        params["attn"], lget("attn"), h, cache["kv"], cfg, t=t)
+    if cfg.family == "hybrid":
+        ssm_out, new_cache["ssm"] = mamba_mod.mamba_decode(
+            params["mamba"], lget("mamba"), h, cache["ssm"], cfg)
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + attn_out
+    h2 = rms_norm(x, params["norm2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        moe_out, _ = _moe_dispatch(params["moe"], lget("moe"), h2, cfg, False)
+        x = x + moe_out
+    else:
+        x = x + mlp_mod.mlp_forward(params["mlp"], lget("mlp"), h2, cfg)
+    return x, new_cache

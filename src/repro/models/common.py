@@ -1,0 +1,156 @@
+"""Shared building blocks: norms, rotary embeddings, initializers, LoRA dense.
+
+All models are pure-functional pytrees: ``init_*`` returns a nested dict of
+jnp arrays, ``*_apply`` consumes it. Matmuls accumulate in fp32 via
+``preferred_element_type`` regardless of the storage dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+ACC_DTYPE = jnp.float32
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(ACC_DTYPE)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(ACC_DTYPE)).astype(x.dtype)
+
+
+def init_rms_norm(dim: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((dim,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,seq,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (...,seq,1,hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# LoRA
+# ---------------------------------------------------------------------------
+
+
+def init_lora_pair(key, in_dim: int, out_dim: int, rank: int, dtype=jnp.float32) -> Params:
+    ka, _ = jax.random.split(key)
+    # A ~ N(0, 1/r), B = 0 (standard LoRA init: delta starts at zero)
+    a = jax.random.normal(ka, (in_dim, rank), jnp.float32) / math.sqrt(rank)
+    return {"a": a.astype(dtype), "b": jnp.zeros((rank, out_dim), dtype)}
+
+
+def lora_dense(
+    x: jax.Array,
+    w: jax.Array,
+    lora: Optional[Params],
+    scale: float,
+    bias: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """y = x @ W (+bias) + scale * (x @ A) @ B.
+
+    ``use_kernel=True`` routes through the fused Pallas TPU kernel
+    (``repro.kernels.lora_matmul``); the default is the pure-jnp path that
+    XLA fuses on any backend.
+
+    Each matmul output is cast to the activation dtype *immediately*: the
+    MXU still accumulates in f32 internally, but tensor-parallel partial
+    sums then cross the ICI as bf16 — this halved the measured TP
+    all-reduce bytes (EXPERIMENTS.md §Perf-3).
+    """
+    if use_kernel and lora is not None:
+        from repro.kernels import ops as kernel_ops
+
+        y = kernel_ops.lora_matmul(x, w, lora["a"], lora["b"], scale)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y
+    y = jnp.matmul(x, w.astype(x.dtype),
+                   preferred_element_type=ACC_DTYPE).astype(x.dtype)
+    if lora is not None:
+        xa = jnp.matmul(x, lora["a"].astype(x.dtype),
+                        preferred_element_type=ACC_DTYPE).astype(x.dtype)
+        y = y + (scale * jnp.matmul(
+            xa, lora["b"].astype(x.dtype),
+            preferred_element_type=ACC_DTYPE)).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+def maybe_lora(lora_tree: Optional[Params], name: str) -> Optional[Params]:
+    if lora_tree is None:
+        return None
+    return lora_tree.get(name)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x.astype(ACC_DTYPE)).astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          ignore_id: int = -100) -> jax.Array:
+    """Mean next-token CE. logits: (B,S,V) fp; labels: (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

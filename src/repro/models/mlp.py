@@ -1,0 +1,48 @@
+"""SwiGLU MLP (dense archs) with LoRA adapters."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (Params, dense_init, init_lora_pair,
+                                 lora_dense, maybe_lora, silu)
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype),
+    }
+
+
+def init_mlp_lora(key, cfg: ModelConfig) -> Params:
+    r, d, f = cfg.lora.rank, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out: Params = {}
+    ldt = jnp.dtype(cfg.lora.dtype)
+    t = cfg.lora.targets
+    if "w_gate" in t:
+        out["w_gate"] = init_lora_pair(ks[0], d, f, r, ldt)
+    if "w_up" in t:
+        out["w_up"] = init_lora_pair(ks[1], d, f, r, ldt)
+    if "w_down" in t:
+        out["w_down"] = init_lora_pair(ks[2], f, d, r, ldt)
+    return out
+
+
+def mlp_forward(params: Params, lora: Optional[Params], x: jax.Array,
+                cfg: ModelConfig, use_lora_kernel: bool = False) -> jax.Array:
+    s = cfg.lora.scale
+    g = lora_dense(x, params["w_gate"], maybe_lora(lora, "w_gate"), s,
+                   use_kernel=use_lora_kernel)
+    u = lora_dense(x, params["w_up"], maybe_lora(lora, "w_up"), s,
+                   use_kernel=use_lora_kernel)
+    return lora_dense(silu(g) * u, params["w_down"],
+                      maybe_lora(lora, "w_down"), s,
+                      use_kernel=use_lora_kernel)

@@ -1,0 +1,228 @@
+"""Full model assembly: init, split-aware forward, loss, cached decode.
+
+Parameters come in two trees:
+  * ``frozen`` — the pre-trained backbone (never receives gradients);
+  * ``lora``   — the trainable adapters (paper: only A/B matrices train).
+
+Layer params are stacked along a leading ``n_layers`` axis and executed with
+``jax.lax.scan`` (+ optional remat), which keeps the HLO size independent of
+depth — essential for lowering the 61-layer / 1T-param configs.
+
+Split learning support: ``forward_hidden(..., lo, hi)`` runs layers
+``[lo, hi)`` only. ``lo == 0`` includes the embedding; ``hi == n_layers``
+is the natural server end (final norm + LM head live with the loss).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.common import (ACC_DTYPE, Params, dtype_of, embed_init,
+                                 init_rms_norm, rms_norm,
+                                 softmax_cross_entropy)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Full parameter tree {"frozen": ..., "lora": ...}."""
+    dtype = dtype_of(cfg.dtype)
+    k_embed, k_head, k_layers, k_lora = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    lora_keys = jax.random.split(k_lora, cfg.n_layers)
+    layers = jax.vmap(lambda k: blocks.init_layer(k, cfg, dtype))(layer_keys)
+    lora_layers = jax.vmap(lambda k: blocks.init_layer_lora(k, cfg))(lora_keys)
+    frozen: Params = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        frozen["head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model,
+                                    dtype).T
+    return {"frozen": frozen, "lora": {"layers": lora_layers}}
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct tree — no allocation (dry-run path for 1T params)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def slice_layers(tree: Params, lo: int, hi: int) -> Params:
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], tree)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(frozen: Params, batch_inputs: jax.Array, cfg: ModelConfig
+                 ) -> jax.Array:
+    """tokens (B,S) int32 -> (B,S,d); or pass-through for 'embeds' mode."""
+    if cfg.input_mode == "embeds":
+        return batch_inputs.astype(dtype_of(cfg.dtype))
+    return jnp.take(frozen["embed"], batch_inputs, axis=0)
+
+
+def forward_hidden(frozen: Params, lora: Optional[Params], inputs: jax.Array,
+                   cfg: ModelConfig, *, lo: int = 0, hi: Optional[int] = None,
+                   positions: Optional[jax.Array] = None,
+                   impl: str = "chunked", remat: bool = True,
+                   use_lora_kernel: bool = False,
+                   inputs_embedded: Optional[bool] = None,
+                   lora_sliced: bool = False,
+                   unroll: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Run layers [lo, hi). By default ``lo==0`` means ``inputs`` are
+    tokens/embeds and the embedding is applied; otherwise ``inputs`` are
+    hidden states (smashed data). ``inputs_embedded=True`` forces the
+    hidden-state interpretation (server stage at cut 0).
+    Returns (hidden, aux_loss_sum)."""
+    hi = cfg.n_layers if hi is None else hi
+    if inputs_embedded is None:
+        inputs_embedded = lo != 0
+    if not inputs_embedded:
+        x = embed_inputs(frozen, inputs, cfg)
+    else:
+        x = inputs
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+
+    layer_params = slice_layers(frozen["layers"], lo, hi)
+    if lora is None:
+        layer_lora = None
+    elif lora_sliced:  # caller already holds exactly the [lo,hi) adapters
+        layer_lora = lora["layers"]
+    else:
+        layer_lora = slice_layers(lora["layers"], lo, hi)
+
+    from repro.shardctx import constrain
+
+    def body(carry, scanned):
+        x, aux = carry
+        if layer_lora is not None:
+            lp, ll = scanned
+        else:
+            lp, ll = scanned, None
+        x = constrain(x, "dp", None, None)
+        x, aux_l = blocks.layer_forward(lp, ll, x, cfg, positions=positions,
+                                        impl=impl,
+                                        use_lora_kernel=use_lora_kernel)
+        return (x, aux + aux_l), None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        # python loop -> unrolled HLO: required for exact cost_analysis FLOPs
+        # (XLA's HloCostAnalysis counts while-loop bodies once, ignoring the
+        # trip count) — the dry-run/roofline path uses this.
+        take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+        for i in range(hi - lo):
+            lp = take(layer_params, i)
+            ll = take(layer_lora, i) if layer_lora is not None else None
+            carry, _ = body(carry, (lp, ll) if ll is not None else lp)
+        x, aux = carry
+        return x, aux
+
+    scanned = (layer_params, layer_lora) if layer_lora is not None else layer_params
+    (x, aux), _ = jax.lax.scan(body, carry, scanned)
+    return x, aux
+
+
+def logits_from_hidden(frozen: Params, x: jax.Array, cfg: ModelConfig
+                       ) -> jax.Array:
+    x = rms_norm(x, frozen["final_norm"], cfg.rms_eps)
+    head = frozen["head"] if not cfg.tie_embeddings else frozen["embed"].T
+    logits = jnp.matmul(x, head.astype(x.dtype),
+                        preferred_element_type=ACC_DTYPE)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad columns (elementwise => sharding-friendly, no gather)
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+def forward_loss(frozen: Params, lora: Optional[Params], batch: Dict[str, Any],
+                 cfg: ModelConfig, *, impl: str = "chunked",
+                 remat: bool = True, use_lora_kernel: bool = False,
+                 unroll: bool = False) -> jax.Array:
+    inputs = batch["embeds"] if cfg.input_mode == "embeds" else batch["tokens"]
+    x, aux = forward_hidden(frozen, lora, inputs, cfg, impl=impl, remat=remat,
+                            use_lora_kernel=use_lora_kernel, unroll=unroll)
+    logits = logits_from_hidden(frozen, x, cfg)
+    return softmax_cross_entropy(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    one = blocks.init_layer_cache(cfg, batch, max_len, dtype)
+    # stack along a leading n_layers axis for lax.scan over layers
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), one)
+
+
+def decode_step(frozen: Params, lora: Optional[Params], cache: Params,
+                inputs: jax.Array, t: jax.Array, cfg: ModelConfig,
+                *, unroll: bool = False) -> Tuple[jax.Array, Params]:
+    """One token for the whole stack. inputs: (B,1) tokens or (B,1,d) embeds;
+    t: scalar int32 position. Returns (logits (B,vocab), new cache)."""
+    x = embed_inputs(frozen, inputs, cfg)
+
+    def body(x, scanned):
+        if lora is not None:
+            lp, ll, lc = scanned
+        else:
+            (lp, lc), ll = scanned, None
+        x, new_c = blocks.layer_decode(lp, ll, x, lc, cfg, t=t)
+        return x, new_c
+
+    if unroll:
+        take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = take(frozen["layers"], i)
+            ll = take(lora["layers"], i) if lora is not None else None
+            lc = take(cache, i)
+            x, nc = body(x, (lp, ll, lc) if lora is not None else (lp, lc))
+            new_caches.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *new_caches)
+    else:
+        scanned = ((frozen["layers"], lora["layers"], cache)
+                   if lora is not None else (frozen["layers"], cache))
+        x, new_cache = jax.lax.scan(body, x, scanned)
+    logits = logits_from_hidden(frozen, x, cfg)
+    return logits[:, 0], new_cache
+
+
+def prefill(frozen: Params, lora: Optional[Params], inputs: jax.Array,
+            cfg: ModelConfig, *, impl: str = "chunked", remat: bool = False,
+            unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Prefill forward: returns (last-position logits, full hidden).
+
+    Note: cache population during prefill reuses the per-layer k/v returned
+    by attention; for the dry-run we lower the compute-dominant path
+    (hidden + logits), matching vLLM-style chunked prefill cost.
+    """
+    x, _ = forward_hidden(frozen, lora, inputs, cfg, impl=impl, remat=remat,
+                          unroll=unroll)
+    logits = logits_from_hidden(frozen, x[:, -1:], cfg)
+    return logits[:, 0], x

@@ -1,0 +1,159 @@
+"""Top-k mixture-of-experts MLP with capacity-based scatter/gather dispatch.
+
+Dispatch is dropless-ish: per-expert capacity ``C = ceil(T*k/E * cf)``;
+tokens beyond capacity are dropped (standard Switch/GShard semantics). The
+dispatch is a scatter into an ``(E, C, d)`` buffer — NOT a one-hot matmul —
+so compiled FLOPs reflect *active* compute (≈ T·k·3·d·ff), which is what the
+roofline and the paper's cost model (active FLOPs for MoE) need.
+
+Sharding: the expert axis of ``w_*`` is sharded over the ``model`` mesh axis;
+tokens arrive batch-sharded over ``data``. GSPMD inserts the all-to-all at
+the scatter/gather boundaries.
+
+LoRA: per DESIGN.md, adapters sit on the shared (d -> d) path around the
+expert block (adapting 40-384 experts per layer would defeat PEFT); shared
+experts get standard SwiGLU adapters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (ACC_DTYPE, Params, dense_init,
+                                 init_lora_pair, lora_dense, maybe_lora, silu)
+from repro.shardctx import axis_size, constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    std = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * std
+                   ).astype(jnp.float32),  # router stays fp32 (standard)
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, fs, dtype),
+            "w_up": dense_init(ks[5], d, fs, dtype),
+            "w_down": dense_init(ks[6], fs, d, dtype),
+        }
+    return p
+
+
+def init_moe_lora(key, cfg: ModelConfig) -> Params:
+    r, d = cfg.lora.rank, cfg.d_model
+    ldt = jnp.dtype(cfg.lora.dtype)
+    return {"out_adapter": init_lora_pair(key, d, d, r, ldt)}
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def group_capacity(n_items: int, n_groups: int, cf: float) -> int:
+    """Slots per group for n_items spread over n_groups, cf headroom."""
+    c = int(math.ceil(n_items / n_groups * cf))
+    return max(8, -(-c // 8) * 8)
+
+
+def ranks_within_groups(groups: jax.Array, n_groups: int) -> jax.Array:
+    """groups: (n,) int32 group ids -> within-group rank (original order),
+    via stable sort: O(n log n), TPU-friendly (no (n, G) one-hot cumsum)."""
+    n = groups.shape[0]
+    order = jnp.argsort(groups, stable=True)
+    sorted_g = groups[order]
+    counts = jnp.bincount(groups, length=n_groups)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) \
+        - offsets[sorted_g].astype(jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+
+def moe_forward(params: Params, lora: Optional[Params], x: jax.Array,
+                cfg: ModelConfig, use_lora_kernel: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = jnp.matmul(xf.astype(jnp.float32), params["router"])  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch eq. 4): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.bincount(idx[:, 0], length=e).astype(jnp.float32) / t
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # --- dispatch: sort-based position assignment (within-expert rank) -----
+    # (a (T*k, E) one-hot cumsum is O(T*k*E) and lowers to a quadratic
+    # reduce-window; the sort is O(n log n) and is what TPU MoE runtimes do)
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    pos = ranks_within_groups(flat_e, e)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    tok = jnp.repeat(jnp.arange(t), k)                        # (T*k,)
+
+    dispatch = jnp.where(keep[:, None], xf[tok], 0).astype(x.dtype)
+    dispatch = constrain(dispatch, "dp", None)                # (T*k, d)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].add(dispatch, mode="drop")
+    # expert-parallel when E divides the model axis (kimi: 384/16); otherwise
+    # capacity-parallel (granite: 40 experts -> shard C, weights stay small)
+    espec = ("model", None, None) if e % axis_size("model") == 0 \
+        else (None, "model", None)
+    buf = constrain(buf, *espec)
+
+    # --- expert compute: (E, C, d) x (E, d, f) -----------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(x.dtype),
+                   preferred_element_type=ACC_DTYPE).astype(x.dtype)
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype),
+                   preferred_element_type=ACC_DTYPE).astype(x.dtype)
+    g = constrain(g, *espec[:2], None)
+    u = constrain(u, *espec[:2], None)
+    h = silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype),
+                   preferred_element_type=ACC_DTYPE).astype(x.dtype)
+    y = constrain(y, *espec)
+
+    # --- combine ------------------------------------------------------------
+    gathered = y[flat_e, pos_c]                               # (T*k, d)
+    gathered = constrain(gathered, "dp", None)
+    w = (gates.reshape(-1) * keep).astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(gathered * w[:, None])
+    out = constrain(out, "dp", None)
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        sg = jnp.matmul(xf, sp["w_gate"].astype(x.dtype),
+                        preferred_element_type=ACC_DTYPE).astype(x.dtype)
+        su = jnp.matmul(xf, sp["w_up"].astype(x.dtype),
+                        preferred_element_type=ACC_DTYPE).astype(x.dtype)
+        out = out + jnp.matmul(silu(sg) * su, sp["w_down"].astype(x.dtype),
+                               preferred_element_type=ACC_DTYPE).astype(x.dtype)
+
+    out = out.reshape(b, s, d)
+    if lora is not None:
+        la = lora["out_adapter"]
+        adapt = jnp.matmul(
+            jnp.matmul(x, la["a"].astype(x.dtype),
+                       preferred_element_type=ACC_DTYPE).astype(x.dtype),
+            la["b"].astype(x.dtype), preferred_element_type=ACC_DTYPE)
+        out = out + cfg.lora.scale * adapt.astype(x.dtype)
+    return out, aux.astype(jnp.float32)

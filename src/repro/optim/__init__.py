@@ -1,0 +1,3 @@
+from repro.optim.optimizer import (adamw, sgd, apply_updates, Optimizer,
+                                   cosine_schedule, constant_schedule,
+                                   warmup_cosine)  # noqa: F401

@@ -1,0 +1,101 @@
+"""Minimal optax-style optimizers (optax is not installed offline).
+
+Pure pytree transforms: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``. LoRA-only masking is
+structural — the trainable tree *is* the LoRA tree, so no mask is needed;
+the frozen backbone never enters the optimizer.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1
+                    ) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        warm = lr * step / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def sgd(schedule: Schedule, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr = schedule(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state["mu"], grads)
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+
+        def upd(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,84 @@
+"""Trace-time sharding context: lets model code place divisibility-guarded
+``with_sharding_constraint``s without threading the mesh through every call.
+
+The launcher (dryrun/train/serve) wraps tracing in ``mesh_ctx(mesh)``; model
+code calls ``constrain(x, 'dp', None, 'model')`` with one tag per dim:
+
+  'dp'    -> shard over the data-parallel axes ("pod","data") if divisible
+  'model' -> shard over the tensor-parallel axis if divisible
+  None    -> replicated
+
+Outside a context (CPU tests, single device) ``constrain`` is a no-op, so
+the model code is backend-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: Optional[Dict] = None
+
+
+def set_ctx(mesh) -> None:
+    global _CTX
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+    _CTX = {"dp": dp, "dp_size": dp_size, "model": model, "mesh": mesh}
+
+
+def clear_ctx() -> None:
+    global _CTX
+    _CTX = None
+
+
+@contextlib.contextmanager
+def mesh_ctx(mesh):
+    set_ctx(mesh)
+    try:
+        yield
+    finally:
+        clear_ctx()
+
+
+def active() -> bool:
+    return _CTX is not None
+
+
+def axis_size(tag: str) -> int:
+    """Size of the 'model' or 'dp' axis group (1 without a context)."""
+    if _CTX is None:
+        return 1
+    return _CTX["dp_size"] if tag == "dp" else _CTX["model"]
+
+
+def dp_axes() -> Tuple[str, ...]:
+    return _CTX["dp"] if _CTX else ()
+
+
+def mesh():
+    return _CTX["mesh"] if _CTX else None
+
+
+def constrain(x: jax.Array, *tags) -> jax.Array:
+    """Apply a guarded sharding constraint; no-op without a context."""
+    if _CTX is None:
+        return x
+    assert len(tags) == x.ndim, (tags, x.shape)
+    spec = []
+    for dim, tag in enumerate(tags):
+        if tag == "dp" and _CTX["dp"] and x.shape[dim] % _CTX["dp_size"] == 0:
+            spec.append(_CTX["dp"])
+        elif tag == "model" and _CTX["model"] > 1 \
+                and x.shape[dim] % _CTX["model"] == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,9 @@
+import os
+
+# CPU-only test environment; smoke tests see 1 device (the dry-run script
+# sets its own 512-device flag and is exercised as a subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

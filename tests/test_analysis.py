@@ -1,0 +1,83 @@
+"""Roofline/analysis units + dry-run record invariants from the matrix."""
+import json
+import os
+
+import pytest
+
+from repro.launch.analysis import (Roofline, _shape_bytes, model_flops,
+                                   parse_collectives)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("f32[2,3,4]") == 96
+    assert _shape_bytes("(bf16[4], f32[4])") == 8 + 16
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("u32[]") == 4  # scalar
+
+
+def test_parse_collectives_ignores_non_collectives():
+    stats = parse_collectives("""
+      %d = f32[8,8]{1,0} dot(%a, %b)
+      %c = f32[8]{0} add(%x, %y)
+    """)
+    assert stats.total_bytes == 0 and not stats.counts
+
+
+def test_parse_collectives_async_start_ops():
+    stats = parse_collectives("""
+      %ag = bf16[64,64]{1,0} all-gather-start(%x), dimensions={0}
+      %cp = u8[16]{0} collective-permute-start(%y)
+    """)
+    assert stats.counts == {"all-gather": 1, "collective-permute": 1}
+
+
+def test_model_flops():
+    from repro.configs.base import get_config
+    cfg = get_config("qwen2-7b")
+    t = 1000
+    assert model_flops(cfg, t, "train") == pytest.approx(
+        6 * cfg.total_params() * t)
+    moe = get_config("kimi-k2-1t-a32b")
+    assert model_flops(moe, t, "inference") == pytest.approx(
+        2 * moe.active_params() * t)
+
+
+def test_roofline_dominant_classification():
+    r = Roofline(flops=1e15, hbm_bytes=1e9, collective_bytes=1e9, chips=256)
+    assert r.dominant == "compute"
+    assert r.bound_s == r.compute_s
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="dry-run matrix not generated yet")
+def test_dryrun_matrix_complete_and_consistent():
+    """Every (10 arch x 4 shape x 2 mesh) combo present and OK; terms
+    positive; decode steps lower serve_step (tokens == batch)."""
+    recs = {}
+    with open(RESULTS) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.dryrun import DRYRUN_ARCHS
+    missing = []
+    for a in DRYRUN_ARCHS:
+        for s in INPUT_SHAPES:
+            for m in ("16x16", "2x16x16"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    missing.append((a, s, m))
+                    continue
+                if not r.get("ok"):
+                    missing.append((a, s, m, r.get("error", "")[:80]))
+                    continue
+                roof = r["roofline"]
+                assert roof["flops"] > 0 and roof["hbm_bytes"] > 0
+                assert roof["dominant"] in ("compute", "memory", "collective")
+                if INPUT_SHAPES[s].kind == "decode":
+                    assert r["tokens"] == INPUT_SHAPES[s].global_batch
+    assert not missing, f"incomplete matrix: {missing[:5]}"

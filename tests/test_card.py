@@ -1,0 +1,122 @@
+"""CARD algorithm: optimality, closed-form frequency, baselines.
+
+Property tests (hypothesis) assert the system's invariants:
+  * CARD == exhaustive (f, c) grid search (within grid resolution)
+  * Eq. 16's closed-form f* is the argmin of the convex frequency subproblem
+  * U is monotone: delay up => cost up (w fixed), energy up => cost up
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core import card as C
+from repro.core.channel import ChannelState, WirelessChannel
+from repro.core.cost_model import RoundContext, Workload
+from repro.core.hardware import (DEFAULT_SIM, EDGE_FLEET, SERVER_RTX4060TI,
+                                 SimParams)
+
+CFG = get_config("llama32-1b")
+
+
+def make_ctx(device_idx=0, snr_up=25.0, snr_down=30.0, w=0.2,
+             batch=4, seq=512, arch_cfg=None):
+    sim = SimParams(w=w, mini_batch=batch, seq_len=seq)
+    ch = ChannelState(snr_up_db=snr_up, snr_down_db=snr_down,
+                      bandwidth_hz=sim.bandwidth_hz)
+    return RoundContext(workload=Workload(arch_cfg or CFG, batch, seq),
+                        device=EDGE_FLEET[device_idx],
+                        server=SERVER_RTX4060TI, channel=ch, sim=sim)
+
+
+@settings(max_examples=40, deadline=None)
+@given(device_idx=st.integers(0, 4),
+       snr_up=st.floats(-5, 40), snr_down=st.floats(-5, 40),
+       w=st.floats(0.05, 0.95))
+def test_card_matches_bruteforce(device_idx, snr_up, snr_down, w):
+    ctx = make_ctx(device_idx, snr_up, snr_down, w)
+    a = C.card(ctx)
+    b = C.card_joint_bruteforce(ctx, n_freq=300)
+    # closed-form f* beats (or ties) any gridded frequency
+    assert a.cost <= b.cost + 1e-9
+    assert 0 <= a.cut <= CFG.n_layers
+    assert ctx.f_min() - 1e-6 <= a.frequency <= ctx.server.f_max + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(device_idx=st.integers(0, 4), w=st.floats(0.05, 0.95),
+       cut=st.integers(0, 32))
+def test_frequency_closed_form_is_argmin(device_idx, w, cut):
+    """Eq. 16: f* minimizes U(f | c) over the feasible interval."""
+    ctx = make_ctx(device_idx, w=w)
+    corners = ctx.corners()
+    f_star = C.optimal_frequency(ctx)
+    u_star = ctx.cost(cut, f_star, corners)
+    for f in np.linspace(ctx.f_min(), ctx.server.f_max, 200):
+        assert u_star <= ctx.cost(cut, float(f), corners) + 1e-9
+
+
+def test_cost_monotonicity():
+    ctx = make_ctx()
+    corners = ctx.corners()
+    f = C.optimal_frequency(ctx)
+    # higher f: delay term down, energy term up (both strictly, c=0)
+    d1, d2 = ctx.round_delay(0, f), ctx.round_delay(0, f * 1.2)
+    e1, e2 = ctx.server_energy(0, f), ctx.server_energy(0, f * 1.2)
+    assert d2 < d1 and e2 > e1
+    # energy at full offload decreases with cut (less server work)
+    assert ctx.server_energy(32, f) < ctx.server_energy(0, f)
+    # device compute delay increases with cut
+    assert ctx.device_comp_delay(32) > ctx.device_comp_delay(0)
+    del corners
+
+
+def test_bimodal_optimal_cut_uniform_stack():
+    """Paper Fig. 3(a): uniform per-layer cost => optimum at an endpoint."""
+    for device_idx in range(5):
+        for seed in range(8):
+            ch = WirelessChannel("normal", seed=seed).draw()
+            sim = DEFAULT_SIM
+            ctx = RoundContext(workload=Workload(CFG, sim.mini_batch,
+                                                 sim.seq_len),
+                               device=EDGE_FLEET[device_idx],
+                               server=SERVER_RTX4060TI, channel=ch, sim=sim)
+            d = C.card(ctx, respect_memory=False)
+            assert d.cut in (0, CFG.n_layers), \
+                f"non-endpoint cut {d.cut} for device{device_idx + 1}"
+
+
+def test_weak_devices_prefer_offload():
+    """Paper Fig. 3: device5 (weakest) must offload everything (c=0)."""
+    ctx5 = make_ctx(device_idx=4)
+    assert C.card(ctx5).cut == 0
+
+
+def test_server_only_device_only_endpoints():
+    ctx = make_ctx()
+    assert C.server_only(ctx).cut == 0
+    assert C.device_only(ctx).cut == CFG.n_layers
+    # server-only burns the most server energy; device-only the least
+    assert C.server_only(ctx).energy > C.card(ctx).energy
+    assert C.device_only(ctx).energy <= C.card(ctx).energy + 1e-9
+
+
+def test_memory_mask_forces_server_side_for_1t_model():
+    """Kimi-1T cannot reside on a Jetson: CARD must pick c=0."""
+    kimi = get_config("kimi-k2-1t-a32b")
+    ctx = make_ctx(device_idx=0, arch_cfg=kimi, batch=1, seq=128)
+    assert ctx.max_feasible_cut() == 0
+    assert C.card(ctx).cut == 0
+
+
+def test_q_formula_exact():
+    """Q = cbrt(w (Emax-Emin) / (2 xi (1-w) (Dmax-Dmin))) before clipping."""
+    ctx = make_ctx(w=0.5)
+    d_min, d_max, e_min, e_max = ctx.corners()
+    q = ((0.5 * (e_max - e_min))
+         / (2 * ctx.sim.xi * 0.5 * (d_max - d_min))) ** (1 / 3)
+    f = C.optimal_frequency(ctx)
+    assert f == pytest.approx(
+        float(np.clip(q, ctx.f_min(), ctx.server.f_max)), rel=1e-9)

@@ -1,0 +1,106 @@
+"""End-to-end SL protocol: real split fine-tuning converges (Eq. 1) and the
+fleet simulator reproduces the paper's qualitative findings (Sec. V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.channel import WirelessChannel
+from repro.core.hardware import EDGE_FLEET, SERVER_RTX4060TI, SimParams
+from repro.core.protocol import SplitFineTuner
+from repro.core.scheduler import compare_policies, simulate_fleet
+from repro.data import make_fleet_datasets
+from repro.models import model as M
+from repro.launch.train import run_training
+from repro.optim import adamw, constant_schedule, apply_updates
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    """A briefly pre-trained tiny backbone (the 'pre-trained LLM')."""
+    out = run_training(arch="llama32-1b", steps=0, pretrain_steps=80,
+                       batch=8, seq_len=64, log_every=0)
+    return out["cfg"], out["frozen"]
+
+
+def test_split_finetuning_converges(pretrained):
+    cfg, frozen = pretrained
+    lora = M.init_params(jax.random.PRNGKey(3), cfg)["lora"]
+    datasets = make_fleet_datasets(cfg, 2, vocab=cfg.vocab_size, seed=1)
+    sim = SimParams(local_epochs=2, mini_batch=8, seq_len=64)
+    ft = SplitFineTuner(cfg, frozen, lora, adamw(constant_schedule(3e-3)),
+                        devices=list(EDGE_FLEET[:2]), server=SERVER_RTX4060TI,
+                        channels=[WirelessChannel("normal", seed=i)
+                                  for i in range(2)],
+                        datasets=datasets, sim=sim, policy="card")
+    res = ft.run(6)
+    losses = res.losses()
+    first = np.mean(losses[:3])
+    last = np.mean(losses[-3:])
+    assert last < first - 0.05, f"no convergence: {first:.3f} -> {last:.3f}"
+    assert all(l.cut in range(0, cfg.n_layers + 1) for l in res.logs)
+
+
+def test_policies_order_delay_energy():
+    """Fig. 4 qualitative: device-only slowest, server-only most energy;
+    CARD in between on both axes."""
+    cfg = get_config("llama32-1b")
+    logs = {p: simulate_fleet(cfg, policy=p, channel_state="normal",
+                              rounds=12, seed=3)
+            for p in ("card", "server_only", "device_only")}
+    assert logs["card"].mean_delay() < logs["device_only"].mean_delay()
+    assert logs["card"].mean_energy() < logs["server_only"].mean_energy()
+    assert logs["server_only"].mean_delay() <= logs["card"].mean_delay()
+    assert logs["device_only"].mean_energy() <= logs["card"].mean_energy()
+
+
+def test_paper_headline_reductions():
+    """Abstract: 70.8% delay cut vs device-only, 53.1% energy cut vs
+    server-only. Our constants differ where the paper under-specifies
+    (distance, bandwidth), so assert the reductions are large (>=40%),
+    the right sign, and log the exact figures in benchmarks/fig4."""
+    cfg = get_config("llama32-1b")
+    card = simulate_fleet(cfg, policy="card", rounds=20, seed=0)
+    dev = simulate_fleet(cfg, policy="device_only", rounds=20, seed=0)
+    srv = simulate_fleet(cfg, policy="server_only", rounds=20, seed=0)
+    delay_red = 1 - card.mean_delay() / dev.mean_delay()
+    energy_red = 1 - card.mean_energy() / srv.mean_energy()
+    assert delay_red >= 0.40, f"delay reduction only {delay_red:.1%}"
+    assert energy_red >= 0.40, f"energy reduction only {energy_red:.1%}"
+
+
+def test_channel_state_degrades_delay():
+    cfg = get_config("llama32-1b")
+    delays = [simulate_fleet(cfg, policy="card", channel_state=s,
+                             rounds=10, seed=2).mean_delay()
+              for s in ("good", "normal", "poor")]
+    assert delays[0] <= delays[1] <= delays[2]
+
+
+def test_cut_decisions_bimodal_in_simulation():
+    """Fig. 3(a): with uniform decoder layers the chosen cuts concentrate
+    on the endpoints {0, I}."""
+    cfg = get_config("llama32-1b")
+    log = simulate_fleet(cfg, policy="card", rounds=30, seed=1,
+                         respect_memory=False)
+    cuts = set(np.unique(log.cuts))
+    assert cuts <= {0, cfg.n_layers}
+
+
+def test_compare_policies_grid_shape():
+    cfg = get_config("llama32-1b")
+    grid = compare_policies(cfg, rounds=3, channel_states=("good",))
+    assert set(grid) == {"card", "server_only", "device_only"}
+    assert grid["card"]["good"].cuts.shape == (3, 5)
+
+
+def test_parallel_round_stats_bounds():
+    """Beyond-paper parallel-SL analysis: bounds are ordered and finite."""
+    from repro.core.scheduler import parallel_round_stats
+    cfg = get_config("llama32-1b")
+    log = simulate_fleet(cfg, policy="card", rounds=5, seed=0)
+    st = parallel_round_stats(log)
+    assert st["parallel_lower_s"] <= st["sequential_s"]
+    assert st["parallel_lower_s"] <= st["parallel_upper_s"]
+    assert st["speedup_ub"] >= st["speedup_lb"] > 0

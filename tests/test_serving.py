@@ -1,0 +1,67 @@
+"""Serving engine: continuous batching correctness + throughput accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_matches_generate_greedy(setup):
+    cfg, params = setup
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (5,), 0,
+                                           cfg.vocab_size), np.int32)
+    want = np.asarray(generate(cfg, params["frozen"], params["lora"],
+                               jnp.asarray(prompt)[None], max_new=6))[0]
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=2,
+                        max_len=32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=6))
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 1
+    got = eng.completed[0].output
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_continuous_batching_multiplexes(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=2,
+                        max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 3 + i,
+                                               dtype=np.int32).astype(np.int32),
+                    max_new=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 5
+    assert all(len(r.output) == 4 for r in eng.completed)
+    # with 2 slots and 5 requests, batching must overlap: fewer ticks than
+    # the fully sequential schedule
+    seq_ticks = sum(len(r.prompt) + r.max_new - 1 for r in reqs)
+    assert stats["ticks"] < seq_ticks
+
+
+def test_slot_isolation(setup):
+    """A recycled slot must not leak cache state into the next request."""
+    cfg, params = setup
+    prompt = np.asarray([7, 3, 11], np.int32)
+    # run the same request twice through the same engine (slot reuse)...
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=1,
+                        max_len=32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=5))
+    eng.run_until_drained()
+    first = list(eng.completed[0].output)
+    eng.submit(Request(uid=1, prompt=prompt, max_new=5))
+    eng.run_until_drained(max_ticks=20_000)
+    second = list(eng.completed[1].output)
+    assert first == second

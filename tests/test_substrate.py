@@ -1,0 +1,145 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, LoRA math."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import get_config
+from repro.data import DeviceDataset, make_fleet_datasets, synthetic_lm_task
+from repro.models.common import init_lora_pair, lora_dense
+from repro.optim import (adamw, apply_updates, constant_schedule,
+                         cosine_schedule, sgd, warmup_cosine)
+
+
+# --- optimizer ---------------------------------------------------------------
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.5])}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(constant_schedule(0.1)),
+    lambda: adamw(constant_schedule(0.1)),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, rel=0.2)
+    assert float(s(jnp.int32(100))) < 0.3
+    c = cosine_schedule(2.0, 50)
+    assert float(c(jnp.int32(0))) == pytest.approx(2.0)
+
+
+def test_adamw_weight_decay():
+    opt = adamw(constant_schedule(0.1), weight_decay=0.5)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.zeros((4,))}
+    upd, _ = opt.update(g, state, params)
+    assert float(upd["w"][0]) < 0  # pure decay pulls towards zero
+
+
+# --- checkpoint --------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": jnp.zeros((2,), jnp.int32)},
+    }
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree, step=17)
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step = load_checkpoint(path, like)
+    assert step == 17
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+# --- data pipeline -----------------------------------------------------------
+
+
+def test_transition_matrix_is_stochastic():
+    p = synthetic_lm_task(64, seed=0)
+    assert p.shape == (64, 64)
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-6)
+    # the successor permutation dominates: the argmaxes form a bijection
+    arg = p.argmax(-1)
+    assert len(set(arg.tolist())) > 60
+    # different seeds are genuinely different tasks
+    p2 = synthetic_lm_task(64, seed=1)
+    assert (p.argmax(-1) != p2.argmax(-1)).mean() > 0.9
+
+
+def test_device_datasets_non_iid_but_shared_task():
+    cfg = get_config("llama32-1b").reduced()
+    ds = make_fleet_datasets(cfg, 3, vocab=64, seed=0)
+    assert [d.noise for d in ds] == sorted({d.noise for d in ds})
+    b = ds[0].minibatch(4, 16)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert b["tokens"].dtype == np.int32
+    # labels are next-token shifted inputs
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_embeds_frontend_stub():
+    cfg = get_config("musicgen-large").reduced()
+    ds = make_fleet_datasets(cfg, 1, vocab=cfg.vocab_size, seed=0)
+    b = ds[0].minibatch(2, 8)
+    assert "embeds" in b and b["embeds"].shape == (2, 8, cfg.d_model)
+    assert b["embeds"].dtype == np.float32
+
+
+# --- LoRA math ---------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(rank=st.integers(1, 8), scale=st.floats(0.1, 4.0))
+def test_lora_dense_delta_rank(rank, scale):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (16, 12))
+    lora = init_lora_pair(jax.random.PRNGKey(1), 16, 12, rank)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 16))
+    base = lora_dense(x, w, None, scale)
+    # B initialized to zero => no initial delta (standard LoRA)
+    np.testing.assert_allclose(np.asarray(lora_dense(x, w, lora, scale)),
+                               np.asarray(base), atol=1e-6)
+    # after perturbing B the delta has rank <= r
+    lora = {"a": lora["a"],
+            "b": jax.random.normal(jax.random.PRNGKey(3), lora["b"].shape)}
+    delta = np.asarray(lora_dense(x, w, lora, scale) - base)
+    full_delta = np.asarray(x) @ (np.asarray(lora["a"])
+                                  @ np.asarray(lora["b"])) * scale
+    np.testing.assert_allclose(delta, full_delta, atol=1e-4)
