@@ -3,13 +3,20 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract:
   fig3_decisions   — Fig. 3(a)/(b): cut-layer + frequency decisions
   fig4_comparison  — Fig. 4: delay/energy vs Server-only / Device-only
+  fleet_scale      — vectorized engine throughput on heterogeneous fleets
   card_algorithm   — Alg. 1 runtime (O(I) decisions/second)
   split_step       — one real split fine-tuning epoch (tiny model, CPU)
   kernel_*         — Pallas kernel micro-benchmarks
   roofline_table   — §Roofline summary from results/dryrun.jsonl
+
+``--smoke`` imports every benchmark module and runs tiny versions of the
+figure pipelines — the CI check that keeps them importable and runnable.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import pkgutil
 import time
 
 
@@ -19,7 +26,46 @@ def _timed(fn):
     return (time.perf_counter() - t0) * 1e6, out
 
 
+def smoke() -> None:
+    """Import every benchmarks/ module, then run the figure pipelines tiny."""
+    import benchmarks
+    rows = []
+    for info in sorted(pkgutil.iter_modules(benchmarks.__path__),
+                       key=lambda i: i.name):
+        if info.name == "run":
+            continue
+        us, _ = _timed(lambda: importlib.import_module(
+            f"benchmarks.{info.name}"))
+        rows.append((f"import_{info.name}", us, "ok"))
+
+    from benchmarks import fig3_decisions, fig4_comparison, fleet_scale_bench
+    us, fig3 = _timed(lambda: fig3_decisions.run(rounds=2))
+    rows.append(("fig3_decisions_smoke", us, f"bimodal={fig3['bimodal']}"))
+    us, fig4 = _timed(lambda: fig4_comparison.run(rounds=2))
+    rows.append(("fig4_comparison_smoke", us,
+                 f"delay_red={fig4['avg_delay_reduction']:.3f}"))
+    us, scale = _timed(lambda: fig4_comparison.run_fleet_scale(
+        n_devices=50, rounds=2))
+    rows.append(("fig4_fleet_scale_smoke", us,
+                 f"devices=50;delay_red={scale['avg_delay_reduction']:.3f}"))
+    us, fleet = _timed(lambda: fleet_scale_bench.run(
+        sizes=(5,), big=100, rounds=2, big_rounds=2))
+    rows.append(("fleet_scale_smoke", us,
+                 f"speedup={fleet['speedup_at_largest']:.1f};"
+                 f"big_dec_per_s={fleet['big_fleet']['decisions_per_s']:.0f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast importability/pipeline check for CI")
+    if ap.parse_args().smoke:
+        smoke()
+        return
     rows = []
 
     # --- Fig. 3 -------------------------------------------------------------
@@ -35,6 +81,16 @@ def main() -> None:
     rows.append(("fig4_comparison", us,
                  f"delay_red={fig4['avg_delay_reduction']:.3f}(paper 0.708);"
                  f"energy_red={fig4['avg_energy_reduction']:.3f}(paper 0.531)"))
+
+    # --- fleet scale (vectorized engine vs scalar oracle) --------------------
+    from benchmarks import fleet_scale_bench
+    us, fleet = _timed(lambda: fleet_scale_bench.run(
+        sizes=(10, 100), big=1000, rounds=5, big_rounds=10))
+    b = fleet["big_fleet"]
+    rows.append(("fleet_scale", us,
+                 f"speedup_100dev={fleet['speedup_at_largest']:.0f}x;"
+                 f"1000dev_dec_per_s={b['decisions_per_s']:.0f};"
+                 f"parallel_speedup={b['parallel_speedup']:.1f}"))
 
     # --- CARD runtime (Alg. 1 is O(I)) ---------------------------------------
     from repro.configs.base import get_config

@@ -14,11 +14,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import RoundContext
+from repro.core.cost_model import BatchedRoundContext, RoundContext
 
 
 @dataclass(frozen=True)
@@ -106,3 +109,118 @@ def static_cut(ctx: RoundContext, cut: int) -> Decision:
 def random_cut(ctx: RoundContext, rng: np.random.Generator) -> Decision:
     cut = int(rng.integers(0, ctx.workload.cfg.n_layers + 1))
     return static_cut(ctx, cut)
+
+
+# ---------------------------------------------------------------------------
+# Batched CARD — the whole (rounds x devices x cuts) grid under jit
+# ---------------------------------------------------------------------------
+
+
+class BatchedDecision(NamedTuple):
+    """Per-(round, device) decisions; every field is an (R, D) array."""
+    cuts: jnp.ndarray         # int32
+    freqs: jnp.ndarray        # Hz
+    costs: jnp.ndarray        # Eq. 12 scalarized cost
+    delays: jnp.ndarray       # Eq. 10 total round delay, s
+    energies: jnp.ndarray     # Eq. 11 server energy, J
+    d_device: jnp.ndarray     # delay breakdown: device compute
+    d_uplink: jnp.ndarray     #                  uplink (smashed + adapters)
+    d_server: jnp.ndarray     #                  server compute
+    d_downlink: jnp.ndarray   #                  downlink (grads + adapters)
+
+
+def batched_optimal_frequency(bctx: BatchedRoundContext,
+                              corners=None) -> jnp.ndarray:
+    """Eq. (16) per (round, device): Q depends only on the corners, which
+    depend on the channel draw — hence an (R, D) array of f*."""
+    if corners is None:
+        corners = bctx.corners()
+    d_min, d_max, e_min, e_max = corners
+    # w is traced (see BatchedRoundContext): guard the 1-w division and
+    # select the pure-delay w=1 endpoint with where, not Python control flow
+    q = ((bctx.w * (e_max - e_min))
+         / (2.0 * bctx.xi * jnp.maximum(1.0 - bctx.w, 1e-12)
+            * jnp.maximum(d_max - d_min, 1e-12))) ** (1.0 / 3.0)
+    f = jnp.clip(q, bctx.f_min()[None, :], bctx.server_f_max)
+    return jnp.where(bctx.w >= 1.0, bctx.server_f_max, f)
+
+
+def _batched_evaluate(bctx: BatchedRoundContext, cuts: jnp.ndarray,
+                      f: jnp.ndarray, corners) -> BatchedDecision:
+    """Metrics for fixed per-(round, device) decisions (cuts, f): (R, D)."""
+    c = cuts[..., None]
+    parts = bctx.delay_components(c, f)
+    return BatchedDecision(
+        cuts=cuts.astype(jnp.int32),
+        freqs=jnp.broadcast_to(f, bctx.shape),
+        costs=bctx.cost(c, f, corners)[..., 0],
+        delays=parts.total[..., 0],
+        energies=bctx.server_energy(c, f)[..., 0],
+        d_device=parts.device_comp[..., 0], d_uplink=parts.uplink[..., 0],
+        d_server=parts.server_comp[..., 0], d_downlink=parts.downlink[..., 0])
+
+
+@partial(jax.jit, static_argnames=("respect_memory",))
+def batched_card(bctx: BatchedRoundContext, *,
+                 respect_memory: bool = True) -> BatchedDecision:
+    """Alg. 1 for the whole fleet: closed-form f* per (round, device), then
+    the brute-force over cuts becomes one argmin over the cost tensor."""
+    corners = bctx.corners()
+    f_star = batched_optimal_frequency(bctx, corners)
+    grid = jnp.arange(bctx.n_cuts)
+    cost = bctx.cost(grid, f_star, corners)                 # (R, D, C)
+    if respect_memory:
+        infeasible = grid[None, None, :] > bctx.max_cut[None, :, None]
+        cost = jnp.where(infeasible, jnp.inf, cost)
+    best = jnp.argmin(cost, axis=-1).astype(jnp.int32)      # (R, D)
+    return _batched_evaluate(bctx, best, f_star, corners)
+
+
+@partial(jax.jit, static_argnames=("n_freq", "respect_memory"))
+def batched_card_joint_bruteforce(bctx: BatchedRoundContext, *,
+                                  n_freq: int = 200,
+                                  respect_memory: bool = True
+                                  ) -> BatchedDecision:
+    """Exhaustive (f, c) grid, vmapped over the frequency axis — the
+    optimality oracle for the batched path. O(F * R * D * C) memory: use
+    small fleets (tests), not production sweeps."""
+    corners = bctx.corners()
+    grid = jnp.arange(bctx.n_cuts)
+    fgrid = jnp.linspace(bctx.f_min(), bctx.server_f_max, n_freq)  # (F, D)
+
+    def cost_at(fk):
+        cost = bctx.cost(grid, jnp.broadcast_to(fk, bctx.shape), corners)
+        if respect_memory:
+            infeasible = grid[None, None, :] > bctx.max_cut[None, :, None]
+            cost = jnp.where(infeasible, jnp.inf, cost)
+        return cost
+
+    costs = jax.vmap(cost_at)(fgrid)                        # (F, R, D, C)
+    n_dev = bctx.shape[1]
+    flat = jnp.moveaxis(costs, 0, -1)                       # (R, D, C, F)
+    flat = flat.reshape(bctx.shape + (bctx.n_cuts * n_freq,))
+    idx = jnp.argmin(flat, axis=-1)
+    best_c = (idx // n_freq).astype(jnp.int32)
+    f_sel = fgrid[idx % n_freq, jnp.arange(n_dev)[None, :]]
+    return _batched_evaluate(bctx, best_c, f_sel, corners)
+
+
+def batched_server_only(bctx: BatchedRoundContext) -> BatchedDecision:
+    cuts = jnp.zeros(bctx.shape, jnp.int32)
+    return _batched_evaluate(bctx, cuts,
+                             jnp.full(bctx.shape, bctx.server_f_max),
+                             bctx.corners())
+
+
+def batched_device_only(bctx: BatchedRoundContext) -> BatchedDecision:
+    cuts = jnp.full(bctx.shape, bctx.n_cuts - 1, jnp.int32)
+    f = jnp.broadcast_to(bctx.f_min(), bctx.shape)
+    return _batched_evaluate(bctx, cuts, f, bctx.corners())
+
+
+def batched_static_cut(bctx: BatchedRoundContext, cut) -> BatchedDecision:
+    """``cut`` may be a scalar or an (R, D) array (e.g. random-cut draws)."""
+    corners = bctx.corners()
+    f_star = batched_optimal_frequency(bctx, corners)
+    cuts = jnp.broadcast_to(jnp.asarray(cut, jnp.int32), bctx.shape)
+    return _batched_evaluate(bctx, cuts, f_star, corners)

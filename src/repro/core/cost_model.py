@@ -21,11 +21,15 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.channel import ChannelState
-from repro.core.hardware import DeviceProfile, SimParams
+from repro.core.channel import ChannelBatch, ChannelState
+from repro.core.hardware import DeviceProfile, SimParams, fleet_arrays
 
 
 # ---------------------------------------------------------------------------
@@ -89,6 +93,10 @@ def head_fwd_flops_per_token(cfg: ModelConfig) -> float:
 # gradient GEMMs (~= forward cost of the adapters themselves).
 LORA_TRAIN_FACTOR = 2.0
 
+# Fraction of device RAM the frozen backbone may occupy (the rest is
+# activations/runtime). Shared by the scalar and batched feasibility masks.
+MEM_BUDGET_FRACTION = 0.8
+
 
 @dataclass(frozen=True)
 class Workload:
@@ -148,6 +156,23 @@ class Workload:
 # ---------------------------------------------------------------------------
 
 
+class DelayBreakdown(NamedTuple):
+    """Per-component round delay: Eq. 10 split into its four terms.
+
+    Needed for exact parallel-SL round times (Wu et al. JSAC'23 extension):
+    in parallel SL only the server-compute term contends across devices, so
+    the breakdown — not the scalar total — is what the scheduler must know.
+    """
+    device_comp: float   # t * device-side compute (Eq. 7 term)
+    uplink: float        # smashed data up + adapter upload (Eq. 9)
+    server_comp: float   # t * server-side compute (Eq. 8 term)
+    downlink: float      # gradients down + adapter download (Eq. 9)
+
+    @property
+    def total(self):
+        return self.device_comp + self.uplink + self.server_comp + self.downlink
+
+
 @dataclass(frozen=True)
 class RoundContext:
     """Everything CARD needs for one (device, round) decision."""
@@ -165,22 +190,28 @@ class RoundContext:
     def server_comp_delay(self, cut: int, f: float) -> float:
         return self.workload.server_flops(cut) / self.server.throughput(f)
 
-    # -- Eq. 9: total transmission delay for a round (bits / (bit/s))
-    def transmission_delay(self, cut: int) -> float:
+    # -- Eqs. 9-10 split by component; the single source of the delay algebra
+    def delay_components(self, cut: int, f: float) -> DelayBreakdown:
         w, sim, ch = self.workload, self.sim, self.channel
         t = sim.local_epochs
-        up = 8 * sim.phi * w.smashed_bytes(cut, sim.act_bytes) / ch.rate_up
-        down = 8 * sim.phi * w.gradient_bytes(cut, sim.act_bytes) / ch.rate_down
-        adapters = (8 * w.adapter_bytes(cut, sim.adapter_bytes)
-                    * (1.0 / ch.rate_up + 1.0 / ch.rate_down))
-        return t * (up + down) + adapters
+        adapters = 8 * w.adapter_bytes(cut, sim.adapter_bytes)
+        up = (t * 8 * sim.phi * w.smashed_bytes(cut, sim.act_bytes)
+              + adapters) / ch.rate_up
+        down = (t * 8 * sim.phi * w.gradient_bytes(cut, sim.act_bytes)
+                + adapters) / ch.rate_down
+        return DelayBreakdown(device_comp=t * self.device_comp_delay(cut),
+                              uplink=up,
+                              server_comp=t * self.server_comp_delay(cut, f),
+                              downlink=down)
+
+    # -- Eq. 9: total transmission delay for a round (bits / (bit/s))
+    def transmission_delay(self, cut: int) -> float:
+        parts = self.delay_components(cut, self.server.f_max)
+        return parts.uplink + parts.downlink
 
     # -- Eq. 10: total round delay
     def round_delay(self, cut: int, f: float) -> float:
-        t = self.sim.local_epochs
-        comp = t * (self.device_comp_delay(cut)
-                    + self.server_comp_delay(cut, f))
-        return comp + self.transmission_delay(cut)
+        return self.delay_components(cut, f).total
 
     # -- Eq. 11: server computational energy for the round
     def server_energy(self, cut: int, f: float) -> float:
@@ -191,7 +222,7 @@ class RoundContext:
     # -- feasibility: frozen device-side weights must fit device RAM
     def max_feasible_cut(self) -> int:
         cfg = self.workload.cfg
-        budget = 0.8 * self.device.mem_bytes
+        budget = MEM_BUDGET_FRACTION * self.device.mem_bytes
         for c in range(cfg.n_layers, -1, -1):
             if self.workload.device_weight_bytes(c) <= budget:
                 return c
@@ -229,3 +260,166 @@ class RoundContext:
         dn = (d - d_min) / max(d_max - d_min, 1e-12)
         en = (e - e_min) / max(e_max - e_min, 1e-12)
         return w * dn + (1 - w) * en
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet context — array-in/array-out Eqs. 7-12
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BatchedRoundContext:
+    """``RoundContext`` for a whole fleet sweep at once.
+
+    Per-cut tables are precomputed in float64 from the scalar ``Workload``
+    (so both paths share one FLOPs/bytes accounting), then cast to the
+    active jnp precision — float32 unless ``jax_enable_x64`` — and the
+    delay/energy/cost algebra runs as jnp broadcasting over a ``(rounds,
+    devices, cuts)`` tensor. The bimodal cost structure (Fig. 3) keeps the
+    argmin far from float32 eps in practice, but a pathologically
+    near-tied fleet could pick the other endpoint than the float64 scalar
+    oracle. Shape conventions:
+
+      tables       (C,)    — C = n_layers + 1 candidate cuts
+      per-device   (D,)
+      channel      (R, D)  — one link realization per (round, device)
+
+    ``cuts`` arguments index the tables and may be any shape broadcastable
+    against trailing layout ``(R, D, C')`` (typically ``(C,)`` for the full
+    grid, or ``(R, D, 1)`` for per-decision evaluation); ``f`` is a scalar
+    or an ``(R, D)`` per-decision frequency.
+    """
+    # per-cut tables (C,)
+    dev_flops: jnp.ndarray       # eta_D(c), fwd+bwd FLOPs
+    srv_flops: jnp.ndarray       # eta - eta_D(c)
+    up_bits: jnp.ndarray         # per-local-epoch phi-compressed smashed bits
+    down_bits: jnp.ndarray       # per-local-epoch phi-compressed gradient bits
+    adapter_bits: jnp.ndarray    # once-per-round adapter exchange bits
+    # per-device (D,)
+    peak_flops: jnp.ndarray
+    max_cut: jnp.ndarray         # memory-feasibility cap, int32
+    # per-(round, device) (R, D)
+    rate_up: jnp.ndarray
+    rate_down: jnp.ndarray
+    # Eq. 12 weights as 0-d arrays (data, not jit-static: a w-sweep like
+    # ablation_pareto must reuse one compiled grid across all w values)
+    w: jnp.ndarray
+    xi: jnp.ndarray
+    # static hyperparameters (pytree aux data)
+    local_epochs: int
+    server_tp_per_hz: float      # delta_S * sigma_S
+    server_f_max: float
+    server_f_min: float
+
+    @classmethod
+    def build(cls, workload: Workload, devices: Sequence[DeviceProfile],
+              server: DeviceProfile, channels: ChannelBatch,
+              sim: SimParams) -> "BatchedRoundContext":
+        cfg = workload.cfg
+        cuts = range(cfg.n_layers + 1)
+        dev_flops = np.array([workload.device_flops(c) for c in cuts])
+        srv_flops = np.array([workload.server_flops(c) for c in cuts])
+        up_bits = np.array([8 * sim.phi * workload.smashed_bytes(
+            c, sim.act_bytes) for c in cuts])
+        down_bits = np.array([8 * sim.phi * workload.gradient_bytes(
+            c, sim.act_bytes) for c in cuts])
+        adapter_bits = np.array([8 * workload.adapter_bytes(
+            c, sim.adapter_bytes) for c in cuts])
+        arrs = fleet_arrays(devices)
+        # memory feasibility: largest c whose frozen weights fit the budget
+        weights = np.array([workload.device_weight_bytes(c) for c in cuts])
+        feas = (weights[None, :]
+                <= MEM_BUDGET_FRACTION * arrs["mem_bytes"][:, None])  # (D, C)
+        max_cut = np.where(feas.any(axis=1),
+                           feas.shape[1] - 1 - np.argmax(feas[:, ::-1], axis=1),
+                           0)
+        return cls(
+            dev_flops=jnp.asarray(dev_flops), srv_flops=jnp.asarray(srv_flops),
+            up_bits=jnp.asarray(up_bits), down_bits=jnp.asarray(down_bits),
+            adapter_bits=jnp.asarray(adapter_bits),
+            peak_flops=jnp.asarray(arrs["peak_flops"]),
+            max_cut=jnp.asarray(max_cut, jnp.int32),
+            rate_up=jnp.asarray(channels.rate_up),
+            rate_down=jnp.asarray(channels.rate_down),
+            w=jnp.asarray(float(sim.w)), xi=jnp.asarray(float(sim.xi)),
+            local_epochs=int(sim.local_epochs),
+            server_tp_per_hz=float(server.delta * server.sigma),
+            server_f_max=float(server.f_max), server_f_min=float(server.f_min))
+
+    # -- shapes --------------------------------------------------------------
+    @property
+    def n_cuts(self) -> int:
+        return self.dev_flops.shape[0]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.rate_up.shape
+
+    def _f_expand(self, f) -> jnp.ndarray:
+        f = jnp.asarray(f)
+        return f[..., None] if f.ndim == 2 else f
+
+    # -- Sec. III-C feasible frequency floor, per device ---------------------
+    def f_min(self) -> jnp.ndarray:
+        return jnp.maximum(self.peak_flops / self.server_tp_per_hz,
+                           self.server_f_min)
+
+    # -- Eqs. 7-10, per component -------------------------------------------
+    def delay_components(self, cuts, f) -> DelayBreakdown:
+        cuts = jnp.asarray(cuts)
+        f = self._f_expand(f)
+        t = self.local_epochs
+        dev = t * self.dev_flops[cuts] / self.peak_flops[:, None]
+        srv = t * self.srv_flops[cuts] / (f * self.server_tp_per_hz)
+        up = ((t * self.up_bits[cuts] + self.adapter_bits[cuts])
+              / self.rate_up[..., None])
+        down = ((t * self.down_bits[cuts] + self.adapter_bits[cuts])
+                / self.rate_down[..., None])
+        dev, up, srv, down = jnp.broadcast_arrays(dev, up, srv, down)
+        return DelayBreakdown(device_comp=dev, uplink=up,
+                              server_comp=srv, downlink=down)
+
+    def round_delay(self, cuts, f) -> jnp.ndarray:
+        return self.delay_components(cuts, f).total
+
+    # -- Eq. 11 --------------------------------------------------------------
+    def server_energy(self, cuts, f) -> jnp.ndarray:
+        cuts = jnp.asarray(cuts)
+        f = self._f_expand(f)
+        return (self.local_epochs * self.xi * f ** 2 * self.srv_flops[cuts]
+                / self.server_tp_per_hz)
+
+    # -- normalization corners (Sec. III-C), each (R, D) ---------------------
+    def corners(self) -> Tuple[jnp.ndarray, jnp.ndarray,
+                               jnp.ndarray, jnp.ndarray]:
+        last = jnp.array([self.n_cuts - 1])
+        first = jnp.array([0])
+        f_lo = jnp.broadcast_to(self.f_min(), self.shape)
+        f_hi = jnp.full(self.shape, self.server_f_max)
+        d_max = self.round_delay(last, f_lo)[..., 0]
+        e_min = self.server_energy(last, f_lo)[..., 0]
+        d_min = self.round_delay(first, f_hi)[..., 0]
+        e_max = self.server_energy(first, f_hi)[..., 0]
+        return d_min, d_max, e_min, e_max
+
+    # -- Eq. 12 --------------------------------------------------------------
+    def cost(self, cuts, f, corners=None) -> jnp.ndarray:
+        if corners is None:
+            corners = self.corners()
+        d_min, d_max, e_min, e_max = corners
+        d = self.round_delay(cuts, f)
+        e = self.server_energy(cuts, f)
+        dn = ((d - d_min[..., None])
+              / jnp.maximum(d_max - d_min, 1e-12)[..., None])
+        en = ((e - e_min[..., None])
+              / jnp.maximum(e_max - e_min, 1e-12)[..., None])
+        return self.w * dn + (1 - self.w) * en
+
+
+jax.tree_util.register_dataclass(
+    BatchedRoundContext,
+    data_fields=["dev_flops", "srv_flops", "up_bits", "down_bits",
+                 "adapter_bits", "peak_flops", "max_cut", "rate_up",
+                 "rate_down", "w", "xi"],
+    meta_fields=["local_epochs", "server_tp_per_hz",
+                 "server_f_max", "server_f_min"])

@@ -10,6 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, Tuple
 
+import numpy as np
+
 GIGA = 1e9
 
 
@@ -55,6 +57,33 @@ EDGE_FLEET: Tuple[DeviceProfile, ...] = (
     DeviceProfile("device5", "Jetson AGX Nano", 0.5 * GIGA, 2.0, 512,
                   mem_bytes=4e9),
 )
+
+
+def make_heterogeneous_fleet(n: int, *, seed: int = 0,
+                             templates: Tuple[DeviceProfile, ...] = EDGE_FLEET
+                             ) -> Tuple[DeviceProfile, ...]:
+    """An ``n``-device fleet for scale sweeps: each device is one of the
+    Table-I edge platforms with its GPU frequency jittered +-20% (DVFS bins,
+    thermal throttling) — the "massive mobile devices" population the paper
+    targets, heterogeneous in both platform and clock."""
+    rng = np.random.default_rng(seed)
+    kinds = rng.integers(0, len(templates), size=n)
+    scales = rng.uniform(0.8, 1.2, size=n)
+    fleet = []
+    for i in range(n):
+        t = templates[int(kinds[i])]
+        fleet.append(replace(t, name=f"device{i + 1}",
+                             f_max=t.f_max * float(scales[i])))
+    return tuple(fleet)
+
+
+def fleet_arrays(devices) -> Dict[str, "object"]:
+    """Stack per-device scalars into numpy arrays for the batched engine."""
+    return {
+        "peak_flops": np.array([d.peak_flops for d in devices], np.float64),
+        "mem_bytes": np.array([d.mem_bytes for d in devices], np.float64),
+    }
+
 
 # --- TPU v5e server profile (multi-pod mapping, DESIGN.md §3) --------------
 # The paper's continuous f^S maps to allocated server throughput. One v5e

@@ -1,10 +1,20 @@
-"""Decision-level fleet simulator (no JAX execution) — used for the paper's
-figures, which need many rounds x devices x policies cheaply.
+"""Decision-level fleet simulator (no JAX model execution) — used for the
+paper's figures, which need many rounds x devices x policies cheaply.
 
 ``simulate_fleet`` reproduces the experiment grid of Sec. V: per round, per
 device, draw a channel state, run the policy, log (cut, f, delay, energy).
 The numbers feed Fig. 3 / Fig. 4 style benchmarks and the EXPERIMENTS.md
 validation against the paper's 70.8% / 53.1% claims.
+
+Two engines share one cost model:
+
+  engine="vectorized" (default) — all channel states drawn up front
+      ((rounds, devices) batch), then the whole (rounds, devices, cuts)
+      decision grid runs under jax.jit via ``card.batched_card``. This is
+      the path that scales to thousand-device heterogeneous fleets.
+  engine="scalar" — the original per-(round, device) Python loop, kept as
+      the reference oracle; both engines consume identical channel
+      realizations, so their logs agree decision-for-decision.
 """
 from __future__ import annotations
 
@@ -15,8 +25,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import card as card_lib
-from repro.core.channel import WirelessChannel
-from repro.core.cost_model import RoundContext, Workload
+from repro.core.channel import (SEED_STRIDE, WirelessChannel,
+                                draw_channel_matrix)
+from repro.core.cost_model import BatchedRoundContext, RoundContext, Workload
 from repro.core.hardware import (DEFAULT_SIM, EDGE_FLEET, SERVER_RTX4060TI,
                                  DeviceProfile, SimParams)
 
@@ -31,6 +42,12 @@ class FleetLog:
     freqs: np.ndarray       # (rounds, devices) Hz
     delays: np.ndarray      # (rounds, devices) s
     energies: np.ndarray    # (rounds, devices) J
+    # per-component delay breakdown (device / uplink / server / downlink);
+    # filled by both engines, enables exact parallel-SL round times
+    d_device: Optional[np.ndarray] = None
+    d_uplink: Optional[np.ndarray] = None
+    d_server: Optional[np.ndarray] = None
+    d_downlink: Optional[np.ndarray] = None
 
     def mean_delay(self) -> float:
         return float(self.delays.mean())
@@ -39,15 +56,15 @@ class FleetLog:
         return float(self.energies.mean())
 
 
-def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
-                   channel_state: str = "normal", rounds: int = 50,
-                   devices: Sequence[DeviceProfile] = EDGE_FLEET,
-                   server: DeviceProfile = SERVER_RTX4060TI,
-                   sim: SimParams = DEFAULT_SIM, seed: int = 0,
-                   static_cut: Optional[int] = None,
-                   respect_memory: bool = True) -> FleetLog:
+def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
+                           channel_state: str, rounds: int,
+                           devices: Sequence[DeviceProfile],
+                           server: DeviceProfile, sim: SimParams, seed: int,
+                           static_cut: Optional[int],
+                           respect_memory: bool) -> FleetLog:
+    """Reference oracle: the original triple loop, one decision at a time."""
     rng = np.random.default_rng(seed)
-    channels = [WirelessChannel(channel_state, seed=seed + 31 * m,
+    channels = [WirelessChannel(channel_state, seed=seed + SEED_STRIDE * m,
                                 bandwidth_hz=sim.bandwidth_hz,
                                 tx_power_dbm_up=sim.tx_power_dbm_up,
                                 tx_power_dbm_down=sim.tx_power_dbm_down,
@@ -59,6 +76,8 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
     freqs = np.zeros((rounds, nd))
     delays = np.zeros((rounds, nd))
     energies = np.zeros((rounds, nd))
+    parts = {k: np.zeros((rounds, nd))
+             for k in ("d_device", "d_uplink", "d_server", "d_downlink")}
     for n in range(rounds):
         for m, dev in enumerate(devices):
             ctx = RoundContext(workload=workload, device=dev, server=server,
@@ -80,9 +99,75 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
             freqs[n, m] = d.frequency
             delays[n, m] = d.delay
             energies[n, m] = d.energy
+            br = ctx.delay_components(d.cut, d.frequency)
+            parts["d_device"][n, m] = br.device_comp
+            parts["d_uplink"][n, m] = br.uplink
+            parts["d_server"][n, m] = br.server_comp
+            parts["d_downlink"][n, m] = br.downlink
     return FleetLog(policy=policy, channel_state=channel_state, rounds=rounds,
                     device_names=[d.name for d in devices], cuts=cuts,
-                    freqs=freqs, delays=delays, energies=energies)
+                    freqs=freqs, delays=delays, energies=energies, **parts)
+
+
+def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
+                               channel_state: str, rounds: int,
+                               devices: Sequence[DeviceProfile],
+                               server: DeviceProfile, sim: SimParams,
+                               seed: int, static_cut: Optional[int],
+                               respect_memory: bool) -> FleetLog:
+    """All channel states up front, one jitted grid evaluation per policy."""
+    nd = len(devices)
+    batch = draw_channel_matrix(channel_state, rounds, nd, seed=seed,
+                                bandwidth_hz=sim.bandwidth_hz,
+                                tx_power_dbm_up=sim.tx_power_dbm_up,
+                                tx_power_dbm_down=sim.tx_power_dbm_down,
+                                noise_dbm_per_hz=sim.noise_dbm_per_hz)
+    workload = Workload(cfg, sim.mini_batch, sim.seq_len)
+    bctx = BatchedRoundContext.build(workload, devices, server, batch, sim)
+    if policy == "card":
+        dec = card_lib.batched_card(bctx, respect_memory=respect_memory)
+    elif policy == "server_only":
+        dec = card_lib.batched_server_only(bctx)
+    elif policy == "device_only":
+        dec = card_lib.batched_device_only(bctx)
+    elif policy == "static":
+        assert static_cut is not None
+        dec = card_lib.batched_static_cut(bctx, static_cut)
+    elif policy == "random":
+        # same stream the scalar loop consumes for its per-decision draws
+        rng = np.random.default_rng(seed)
+        draws = rng.integers(0, cfg.n_layers + 1, size=(rounds, nd))
+        dec = card_lib.batched_static_cut(bctx, draws)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    return FleetLog(policy=policy, channel_state=channel_state, rounds=rounds,
+                    device_names=[d.name for d in devices],
+                    cuts=np.asarray(dec.cuts, np.int32),
+                    freqs=np.asarray(dec.freqs, np.float64),
+                    delays=np.asarray(dec.delays, np.float64),
+                    energies=np.asarray(dec.energies, np.float64),
+                    d_device=np.asarray(dec.d_device, np.float64),
+                    d_uplink=np.asarray(dec.d_uplink, np.float64),
+                    d_server=np.asarray(dec.d_server, np.float64),
+                    d_downlink=np.asarray(dec.d_downlink, np.float64))
+
+
+def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
+                   channel_state: str = "normal", rounds: int = 50,
+                   devices: Sequence[DeviceProfile] = EDGE_FLEET,
+                   server: DeviceProfile = SERVER_RTX4060TI,
+                   sim: SimParams = DEFAULT_SIM, seed: int = 0,
+                   static_cut: Optional[int] = None,
+                   respect_memory: bool = True,
+                   engine: str = "vectorized") -> FleetLog:
+    kwargs = dict(policy=policy, channel_state=channel_state, rounds=rounds,
+                  devices=devices, server=server, sim=sim, seed=seed,
+                  static_cut=static_cut, respect_memory=respect_memory)
+    if engine == "vectorized":
+        return _simulate_fleet_vectorized(cfg, **kwargs)
+    if engine == "scalar":
+        return _simulate_fleet_scalar(cfg, **kwargs)
+    raise ValueError(f"unknown engine {engine!r}")
 
 
 def parallel_round_stats(log: FleetLog, server: DeviceProfile = SERVER_RTX4060TI,
@@ -92,32 +177,42 @@ def parallel_round_stats(log: FleetLog, server: DeviceProfile = SERVER_RTX4060TI
     splits its compute among them.
 
     The paper's protocol is sequential — round time = sum over devices. In
-    the parallel variant each device's server-side share runs at f*/M
-    effective throughput (cubic power => same energy per unit work at fixed
-    f), so:
+    the parallel variant each device's server-side share runs at 1/M of the
+    server throughput (cubic power => same energy per unit work at fixed f),
+    while device compute and the per-device radio links genuinely overlap:
 
       T_seq  = sum_m D_m
-      T_par  = max_m D_m(fـeff = f*_m / M-share)
+      T_par  = max_m (D_m^dev + D_m^up + M * D_m^srv + D_m^down)
 
-    We approximate the M-way server share by scaling each device's
-    server-compute delay by M (worst case, no pipelining credit).
+    With the per-component breakdown in ``FleetLog`` this is exact (no
+    pipelining credit); the legacy upper/lower bounds — which bracketed it
+    when only the scalar total was logged — are kept for comparison.
     """
     m = len(log.device_names)
     t_seq = float(log.delays.sum(axis=1).mean())
-    # without per-component breakdown we bound: server-side <= whole delay
-    # at c=0 -> parallel upper bound scales delays by M then takes max
+    # legacy bounds: server-side <= whole delay -> scale everything by M (ub);
+    # perfect overlap of communication/device compute (lb)
     t_par_ub = float(np.max(log.delays * m, axis=1).mean())
-    # lower bound: perfect overlap of communication/device compute
     t_par_lb = float(np.max(log.delays, axis=1).mean())
-    return {"sequential_s": t_seq, "parallel_upper_s": t_par_ub,
-            "parallel_lower_s": t_par_lb,
-            "speedup_lb": t_seq / t_par_ub if t_par_ub else float("nan"),
-            "speedup_ub": t_seq / t_par_lb if t_par_lb else float("nan")}
+    out = {"sequential_s": t_seq, "parallel_upper_s": t_par_ub,
+           "parallel_lower_s": t_par_lb,
+           "speedup_lb": t_seq / t_par_ub if t_par_ub else float("nan"),
+           "speedup_ub": t_seq / t_par_lb if t_par_lb else float("nan")}
+    if log.d_server is not None:
+        per_dev = (log.d_device + log.d_uplink + m * log.d_server
+                   + log.d_downlink)
+        t_par = float(np.max(per_dev, axis=1).mean())
+        out["parallel_exact_s"] = t_par
+        out["speedup_exact"] = t_seq / t_par if t_par else float("nan")
+    return out
 
 
 def compare_policies(cfg: ModelConfig, *, rounds: int = 50,
                      channel_states: Sequence[str] = ("good", "normal", "poor"),
-                     seed: int = 0, sim: SimParams = DEFAULT_SIM
+                     seed: int = 0, sim: SimParams = DEFAULT_SIM,
+                     devices: Sequence[DeviceProfile] = EDGE_FLEET,
+                     server: DeviceProfile = SERVER_RTX4060TI,
+                     engine: str = "vectorized"
                      ) -> Dict[str, Dict[str, FleetLog]]:
     """The Fig. 4 grid: policy x channel state."""
     out: Dict[str, Dict[str, FleetLog]] = {}
@@ -126,5 +221,6 @@ def compare_policies(cfg: ModelConfig, *, rounds: int = 50,
         for state in channel_states:
             out[policy][state] = simulate_fleet(
                 cfg, policy=policy, channel_state=state, rounds=rounds,
-                seed=seed, sim=sim)
+                seed=seed, sim=sim, devices=devices, server=server,
+                engine=engine)
     return out

@@ -21,6 +21,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Device-free mesh for sharding-rule checks, across JAX API revisions:
+    0.4.x takes ((name, size), ...) pairs; newer takes (sizes, names)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     """Axes that shard the batch dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,31 @@
+"""Strategies for the vendored hypothesis fallback — just enough surface
+for this repo's property tests: integers, floats, sampled_from."""
+from typing import Callable, List, Sequence
+
+
+class SearchStrategy:
+    """Boundary examples first (index-addressed), then seeded-random draws."""
+
+    def __init__(self, boundary: Sequence, sample: Callable):
+        self._boundary: List = list(boundary)
+        self._sample = sample
+
+    def example(self, rng, index: int):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._sample(rng)
+
+
+def integers(min_value, max_value) -> SearchStrategy:
+    return SearchStrategy([min_value, max_value],
+                          lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_ignored) -> SearchStrategy:
+    return SearchStrategy([min_value, max_value],
+                          lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(elements[:1], lambda rng: rng.choice(elements))

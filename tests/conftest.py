@@ -1,4 +1,12 @@
 import os
+import sys
+
+# Property tests want the real hypothesis (CI installs it via `.[test]`);
+# hermetic environments fall back to the deterministic stub in _stubs/.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
 
 # CPU-only test environment; smoke tests see 1 device (the dry-run script
 # sets its own 512-device flag and is exercised as a subprocess).
