@@ -6,7 +6,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.hardware import SimParams

@@ -1,22 +1,39 @@
-"""Cross-layer consistency: the paper-side analytic cost model (Sec. III,
-eta = FLOPs of the fine-tuning step) vs the compiled-artifact ground truth
-(dry-run probe HLO FLOPs). CARD's decisions are only as good as eta — this
-table shows the analytic model tracks the compiled program within ~2x for
-every architecture family."""
+"""Cross-layer consistency of CARD's cost model, two ways:
+
+  * ``run()``          — the paper-side analytic model (Sec. III, eta =
+    FLOPs of the fine-tuning step) vs the compiled-artifact ground truth
+    (dry-run probe HLO FLOPs from ``results/dryrun.jsonl``);
+  * ``run_measured()`` — the analytic model vs the *measured* cost model:
+    per-arch effective eta from a kernel-calibrated ``LatencyTable``
+    (``measured_cost``), reported as an inflation factor (achieved
+    efficiency gap).  This path needs no dry-run records, so it is the
+    non-empty exit CI smoke mode relies on when ``dryrun.jsonl`` is absent.
+
+Emits the machine-readable ``BENCH_card_calibration.json`` consumed by the
+CI bench-trajectory job:
+
+    PYTHONPATH=src python benchmarks/cost_model_calibration.py \
+        [--smoke] [--json BENCH_card_calibration.json]
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.configs.base import INPUT_SHAPES, get_config
-from repro.core.cost_model import Workload
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.cost_model import Workload, resolve_compute
+from repro.core.measured_cost import (RooflineFit, build_latency_tables,
+                                      fit_roofline, probe_kernels)
 
+SCHEMA = "bench-card-calibration/v1"
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "dryrun.jsonl")
 
 
 def run(path: str = DEFAULT_PATH, shape_name: str = "train_4k") -> List[Dict]:
+    """Analytic eta vs compiled HLO FLOPs, one row per dry-run record."""
     shape = INPUT_SHAPES[shape_name]
     recs = {}
     if os.path.exists(path):
@@ -41,11 +58,77 @@ def run(path: str = DEFAULT_PATH, shape_name: str = "train_4k") -> List[Dict]:
     return rows
 
 
+def run_measured(*, smoke: bool = True, batch: int = 4, seq_len: int = 512,
+                 fit: Optional[RooflineFit] = None) -> Dict:
+    """Analytic eta vs measured effective eta for every architecture.
+
+    ``inflation = effective / analytic`` — how much costlier the step is on
+    the fitted host roofline than the paper's peak-FLOPs accounting says
+    (launch overhead + bandwidth-bound layers push it above 1)."""
+    if fit is None:
+        fit = fit_roofline(probe_kernels(mode="smoke" if smoke else "full"))
+    tables = build_latency_tables(fit, batch=batch, seq_len=seq_len)
+    rows = []
+    for arch in ARCH_IDS:
+        w = Workload(get_config(arch), batch, seq_len)
+        analytic = resolve_compute(w, "analytic")
+        measured = resolve_compute(w, "measured", tables[arch])
+        rows.append({
+            "arch": arch,
+            "analytic_eta_gflops": analytic.total_flops() / 1e9,
+            "effective_eta_gflops": measured.total_flops() / 1e9,
+            "inflation": measured.total_flops() / analytic.total_flops(),
+        })
+    return {"fit": fit.to_dict(), "batch": batch, "seq_len": seq_len,
+            "rows": rows}
+
+
+def build_payload(*, smoke: bool = False, path: str = DEFAULT_PATH) -> Dict:
+    dryrun_rows = run(path)
+    if not dryrun_rows:
+        # The old behavior silently returned an empty table here, which made
+        # CI smoke "pass" while measuring nothing. Say so, loudly, and fall
+        # through to the measured-vs-analytic comparison, which never needs
+        # dry-run records.
+        print(f"skip: no usable dry-run records at {os.path.abspath(path)} "
+              "(regenerate with: PYTHONPATH=src python -m repro.launch.dryrun"
+              " --all --mesh both --out results/dryrun.jsonl); emitting "
+              "measured-vs-analytic calibration only")
+    measured = run_measured(smoke=smoke)
+    return {
+        "schema": SCHEMA,
+        "mode": "smoke" if smoke else "full",
+        "dryrun_status": "ok" if dryrun_rows else "missing",
+        "dryrun_rows": dryrun_rows,
+        "measured": measured,
+        # nothing here is a timed hot path; the gate dict is present (schema
+        # requires it) but empty
+        "gates": {},
+    }
+
+
 def main() -> None:
-    for row in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small probe ladder for the measured comparison")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the BENCH_card_calibration.json payload here")
+    ap.add_argument("--dryrun-path", default=DEFAULT_PATH)
+    args = ap.parse_args()
+    payload = build_payload(smoke=args.smoke, path=args.dryrun_path)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    for row in payload["dryrun_rows"]:
         print(f"{row['arch']:24s} eta={row['analytic_eta_pflops']:9.2f}P "
               f"hlo={row['compiled_pflops']:9.2f}P "
               f"ratio={row['ratio_analytic_over_compiled']:.3f}")
+    for row in payload["measured"]["rows"]:
+        print(f"{row['arch']:24s} eta={row['analytic_eta_gflops']:9.1f}G "
+              f"effective={row['effective_eta_gflops']:9.1f}G "
+              f"inflation={row['inflation']:.3f}")
 
 
 if __name__ == "__main__":

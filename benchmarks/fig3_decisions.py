@@ -1,12 +1,24 @@
 """Paper Fig. 3: optimal cut layer (a) and server frequency (b) per device
-across training rounds, under the dynamic wireless channel."""
+across training rounds, under the dynamic wireless channel — plus the
+decision-divergence report (``run_divergence``): where kernel-measured
+per-layer latencies move the optimal (cut, f) vs the paper's analytic
+FLOP constants.
+
+    PYTHONPATH=src python benchmarks/fig3_decisions.py [--divergence] \
+        [--bench-json BENCH_kernels.json]
+"""
 from __future__ import annotations
 
-from typing import Dict
+import argparse
+import json
+import os
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core.measured_cost import (LatencyTable, RooflineFit,
+                                      fit_roofline, probe_kernels)
 from repro.core.scheduler import simulate_fleet
 
 
@@ -40,9 +52,81 @@ def run(rounds: int = 50, channel_state: str = "normal", seed: int = 0
     return out
 
 
+# ---------------------------------------------------------------------------
+# Decision divergence: measured latency table vs analytic constants
+# ---------------------------------------------------------------------------
+
+
+def _resolve_fit(bench_json: Optional[str]) -> RooflineFit:
+    """Fit from a committed BENCH_kernels.json if present, else fresh
+    smoke probes on this host."""
+    if bench_json and os.path.exists(bench_json):
+        with open(bench_json) as f:
+            payload = json.load(f)
+        return RooflineFit.from_dict(payload["roofline_fit"])
+    return fit_roofline(probe_kernels(mode="smoke"))
+
+
+def run_divergence(rounds: int = 20, *, seed: int = 0,
+                   archs: Sequence[str] = ("llama32-1b", "qwen3-4b",
+                                           "granite-moe-3b-a800m"),
+                   channel_states: Sequence[str] = ("good", "normal", "poor"),
+                   fit: Optional[RooflineFit] = None,
+                   bench_json: Optional[str] = None) -> Dict:
+    """Where do measured latencies move CARD's decisions?
+
+    For every (arch, channel state), run the same fleet/channel realizations
+    through ``cost_source="analytic"`` and ``cost_source="measured"`` and
+    compare the per-(round, device) (cut, f) decisions."""
+    if fit is None:
+        fit = _resolve_fit(bench_json)
+    out: Dict = {"fit": fit.to_dict(), "cells": [], "rounds": rounds}
+    moved_total = 0
+    n_total = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        table = LatencyTable.from_fit(cfg, fit, batch=4, seq_len=512)
+        for state in channel_states:
+            kw = dict(channel_state=state, rounds=rounds, seed=seed,
+                      respect_memory=False)
+            a = simulate_fleet(cfg, **kw)
+            m = simulate_fleet(cfg, cost_source="measured",
+                               latency_table=table, **kw)
+            moved = a.cuts != m.cuts
+            moved_total += int(moved.sum())
+            n_total += moved.size
+            out["cells"].append({
+                "arch": arch, "channel_state": state,
+                "frac_decisions_moved": float(moved.mean()),
+                "mean_cut_analytic": float(a.cuts.mean()),
+                "mean_cut_measured": float(m.cuts.mean()),
+                "mean_abs_cut_shift": float(np.abs(m.cuts.astype(int)
+                                                   - a.cuts).mean()),
+                "mean_freq_shift_ghz": float((m.freqs - a.freqs).mean()
+                                             / 1e9),
+                "mean_delay_ratio": float(m.delays.mean()
+                                          / max(a.delays.mean(), 1e-30)),
+            })
+    out["frac_decisions_moved_overall"] = (moved_total / n_total
+                                           if n_total else 0.0)
+    return out
+
+
 def main() -> None:
-    import json
-    print(json.dumps(run(), indent=2))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--divergence", action="store_true",
+                    help="analytic-vs-measured decision divergence report")
+    ap.add_argument("--bench-json", default="BENCH_kernels.json",
+                    help="reuse the roofline fit from this payload if "
+                         "present (else probe fresh)")
+    ap.add_argument("--rounds", type=int, default=20)
+    args = ap.parse_args()
+    if args.divergence:
+        print(json.dumps(run_divergence(rounds=args.rounds,
+                                        bench_json=args.bench_json),
+                         indent=2))
+    else:
+        print(json.dumps(run(), indent=2))
 
 
 if __name__ == "__main__":

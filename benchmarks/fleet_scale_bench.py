@@ -7,17 +7,21 @@ run — a production sweep reuses the compiled grid across rounds/policies,
 so steady-state throughput is the honest number. Target: >=50x at 100
 devices, and a 1000-device round must complete end-to-end.
 
-    PYTHONPATH=src python benchmarks/fleet_scale_bench.py [--smoke]
+    PYTHONPATH=src python benchmarks/fleet_scale_bench.py [--smoke] \
+        [--json BENCH_fleet_scale.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
-from typing import Dict, List
+from typing import Dict
 
 from repro.configs.base import get_config
 from repro.core.hardware import make_heterogeneous_fleet
 from repro.core.scheduler import parallel_round_stats, simulate_fleet
+
+SCHEMA = "bench-fleet-scale/v1"
 
 
 def _time_engine(cfg, fleet, *, engine: str, rounds: int, seed: int,
@@ -66,6 +70,14 @@ def run(*, sizes=(10, 100), big: int = 1000, rounds: int = 5,
         "parallel_exact_s": stats["parallel_exact_s"],
         "parallel_speedup": stats["speedup_exact"],
     }
+    # jitted hot-path times the CI regression gate may compare PR-over-PR
+    # (scalar-oracle times are the comparison subject, not a hot path, and
+    # are deliberately left out)
+    out["gates"] = {
+        f"batched_card_round_s_{row['devices']}dev": row["vectorized_s"]
+        for row in out["scaling"]
+    }
+    out["gates"][f"batched_card_round_s_{big}dev_big"] = t_big
     return out
 
 
@@ -73,11 +85,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, just prove the path runs")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the BENCH_fleet_scale.json payload here")
     args = ap.parse_args()
     if args.smoke:
         res = run(sizes=(5, 20), big=100, rounds=2, big_rounds=2)
     else:
         res = run()
+    res["schema"] = SCHEMA
+    res["mode"] = "smoke" if args.smoke else "full"
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
     print("devices,rounds,scalar_s,vectorized_s,speedup")
     for row in res["scaling"]:
         print(f"{row['devices']},{row['rounds']},{row['scalar_s']:.3f},"

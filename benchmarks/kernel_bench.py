@@ -1,15 +1,38 @@
-"""Kernel micro-benchmarks: wall time of the Pallas kernels (interpret mode
-on CPU — correctness-path timing) vs their pure-jnp oracles, plus the
-analytic TPU-v5e VMEM/roofline numbers each kernel is designed against."""
+"""Kernel micro-benchmarks + the measured-cost calibration pipeline.
+
+Two layers:
+
+  * the legacy ``bench_*`` functions — wall time of the Pallas kernels
+    (interpret mode on CPU — correctness-path timing) vs their pure-jnp
+    oracles, plus the analytic TPU-v5e VMEM/roofline numbers each kernel
+    is designed against;
+  * ``run()`` — the calibration pipeline: timing probes over the kernel
+    ladder (``measured_cost.probe_kernels``), the roofline fit, and one
+    calibrated ``LatencyTable`` per architecture config, emitted as the
+    machine-readable ``BENCH_kernels.json`` the CI bench-trajectory job
+    commits/uploads and ``check_regression.py`` gates.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke] \
+        [--json BENCH_kernels.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hardware import TPU_V5E_HBM_BW, TPU_V5E_PEAK_BF16
+from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_PEAK_BF16,
+                                 profile_from_throughput)
+from repro.core.measured_cost import (build_latency_tables, fit_roofline,
+                                      probe_kernels)
+
+SCHEMA = "bench-kernels/v1"
+DEFAULT_TABLE_BATCH = 4     # SimParams.mini_batch — the fleet workload shape
+DEFAULT_TABLE_SEQ = 512     # SimParams.seq_len
 
 
 def _time(fn: Callable, reps: int = 3) -> float:
@@ -94,10 +117,59 @@ def bench_flash_decode() -> Dict:
             "tpu_bandwidth_bound_us": cache_bytes / TPU_V5E_HBM_BW * 1e6}
 
 
+def run(*, smoke: bool = False, reps: int = 3) -> Dict:
+    """Probe -> fit -> per-arch latency tables, as one JSON-able payload.
+
+    ``gates`` holds the jitted hot-path times ``check_regression.py`` is
+    allowed to gate on (compiled jnp probe times, keyed by kernel+shape).
+    Pallas interpret-mode times are deliberately NOT gated: on CPU they
+    emulate the TPU program in Python and are far too noisy.
+    """
+    mode = "smoke" if smoke else "full"
+    probes = probe_kernels(mode=mode, reps=reps)
+    fit = fit_roofline(probes)
+    tables = build_latency_tables(fit, batch=DEFAULT_TABLE_BATCH,
+                                  seq_len=DEFAULT_TABLE_SEQ)
+    host = profile_from_throughput("bench-host", fit.ref_throughput)
+    payload: Dict = {
+        "schema": SCHEMA,
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "probes": [p.to_dict() for p in probes],
+        "roofline_fit": fit.to_dict(),
+        "host_profile": {"name": host.name, "peak_flops": host.peak_flops},
+        "latency_tables": {a: t.to_dict() for a, t in tables.items()},
+        "gates": {f"probe_{p.kernel}_{p.shape}_s": p.seconds for p in probes
+                  if p.backend == "jnp"},
+    }
+    if not smoke:
+        payload["kernels"] = [bench_lora_matmul(), bench_flash_attention(),
+                              bench_ssd_scan(), bench_flash_decode()]
+    return payload
+
+
 def main() -> None:
-    for fn in (bench_lora_matmul, bench_flash_attention, bench_ssd_scan,
-               bench_flash_decode):
-        print(fn())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small probe ladder only (CI bench-trajectory mode)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the BENCH_kernels.json payload here")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    payload = run(smoke=args.smoke, reps=args.reps)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    fit = payload["roofline_fit"]
+    print(f"roofline fit [{payload['backend']}]: "
+          f"C={fit['compute_flops_per_s']:.3g} FLOP/s "
+          f"B={fit['bandwidth_bytes_per_s']:.3g} B/s "
+          f"overhead={fit['overhead_s'] * 1e6:.0f}us "
+          f"rel_residual={fit['rel_residual']:.3f}")
+    for r in payload.get("kernels", ()):
+        print(r)
 
 
 if __name__ == "__main__":

@@ -12,10 +12,9 @@ plus static-cut and random-cut baselines for wider comparison.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

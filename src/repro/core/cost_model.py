@@ -19,9 +19,9 @@ uniform stack, so Fig. 3's bimodal-cut finding is preserved per-arch.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+from functools import cached_property
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +152,57 @@ class Workload:
 
 
 # ---------------------------------------------------------------------------
+# Pluggable per-layer compute interface
+# ---------------------------------------------------------------------------
+#
+# Every per-cut compute quantity CARD consumes is routed through a
+# ``ComputeSource``: three methods returning *effective FLOPs at peak*
+# (device side, server side, total).  The analytic FLOPs/frequency path is
+# one implementation; ``measured_cost.TableCompute`` — effective FLOPs
+# back-converted from a calibrated per-layer latency table — is the other.
+# Delay algebra, Eq. 16's closed form, and both CARD engines are agnostic
+# to which one is plugged in.
+
+
+@dataclass(frozen=True)
+class AnalyticCompute:
+    """The paper's analytic FLOP counts (Sec. III), as a ComputeSource."""
+    workload: Workload
+
+    def device_flops(self, cut: int) -> float:
+        return self.workload.device_flops(cut)
+
+    def server_flops(self, cut: int) -> float:
+        return self.workload.server_flops(cut)
+
+    def total_flops(self) -> float:
+        return self.workload.total_flops()
+
+
+COST_SOURCES = ("analytic", "measured")
+
+
+def resolve_compute(workload: Workload, cost_source: str = "analytic",
+                    latency_table=None):
+    """Pick the ComputeSource for ``cost_source``.
+
+    ``"analytic"`` — FLOP counts from the ``Workload`` (paper constants).
+    ``"measured"`` — effective FLOPs from a ``measured_cost.LatencyTable``
+    calibrated against kernel timings (must be passed as ``latency_table``).
+    """
+    if cost_source == "analytic":
+        return AnalyticCompute(workload)
+    if cost_source == "measured":
+        if latency_table is None:
+            raise ValueError("cost_source='measured' requires a latency_table"
+                             " (see repro.core.measured_cost.LatencyTable)")
+        from repro.core.measured_cost import TableCompute
+        return TableCompute(workload=workload, table=latency_table)
+    raise ValueError(f"unknown cost_source {cost_source!r}; "
+                     f"expected one of {COST_SOURCES}")
+
+
+# ---------------------------------------------------------------------------
 # Delay & energy (Eqs. 7-11)
 # ---------------------------------------------------------------------------
 
@@ -175,20 +226,32 @@ class DelayBreakdown(NamedTuple):
 
 @dataclass(frozen=True)
 class RoundContext:
-    """Everything CARD needs for one (device, round) decision."""
+    """Everything CARD needs for one (device, round) decision.
+
+    ``cost_source`` selects the per-layer compute backend: ``"analytic"``
+    (paper FLOP counts, the default) or ``"measured"`` (a kernel-calibrated
+    ``measured_cost.LatencyTable`` passed as ``latency_table``).
+    """
     workload: Workload
     device: DeviceProfile
     server: DeviceProfile
     channel: ChannelState
     sim: SimParams
+    cost_source: str = "analytic"
+    latency_table: Optional[object] = None
+
+    @cached_property
+    def compute(self):
+        return resolve_compute(self.workload, self.cost_source,
+                               self.latency_table)
 
     # -- Eq. 7: device computation delay per local epoch
     def device_comp_delay(self, cut: int) -> float:
-        return self.workload.device_flops(cut) / self.device.peak_flops
+        return self.compute.device_flops(cut) / self.device.peak_flops
 
     # -- Eq. 8: server computation delay per local epoch at frequency f
     def server_comp_delay(self, cut: int, f: float) -> float:
-        return self.workload.server_flops(cut) / self.server.throughput(f)
+        return self.compute.server_flops(cut) / self.server.throughput(f)
 
     # -- Eqs. 9-10 split by component; the single source of the delay algebra
     def delay_components(self, cut: int, f: float) -> DelayBreakdown:
@@ -216,7 +279,7 @@ class RoundContext:
     # -- Eq. 11: server computational energy for the round
     def server_energy(self, cut: int, f: float) -> float:
         t = self.sim.local_epochs
-        return (t * self.sim.xi * f ** 2 * self.workload.server_flops(cut)
+        return (t * self.sim.xi * f ** 2 * self.compute.server_flops(cut)
                 / (self.server.delta * self.server.sigma))
 
     # -- feasibility: frozen device-side weights must fit device RAM
@@ -271,8 +334,10 @@ class RoundContext:
 class BatchedRoundContext:
     """``RoundContext`` for a whole fleet sweep at once.
 
-    Per-cut tables are precomputed in float64 from the scalar ``Workload``
-    (so both paths share one FLOPs/bytes accounting), then cast to the
+    Per-cut tables are precomputed in float64 from the scalar ComputeSource
+    — analytic ``Workload`` FLOPs or a measured ``LatencyTable``, selected
+    by ``build(..., cost_source=...)`` exactly as in ``RoundContext`` (so
+    scalar and batched paths share one accounting), then cast to the
     active jnp precision — float32 unless ``jax_enable_x64`` — and the
     delay/energy/cost algebra runs as jnp broadcasting over a ``(rounds,
     devices, cuts)`` tensor. The bimodal cost structure (Fig. 3) keeps the
@@ -314,11 +379,13 @@ class BatchedRoundContext:
     @classmethod
     def build(cls, workload: Workload, devices: Sequence[DeviceProfile],
               server: DeviceProfile, channels: ChannelBatch,
-              sim: SimParams) -> "BatchedRoundContext":
+              sim: SimParams, *, cost_source: str = "analytic",
+              latency_table=None) -> "BatchedRoundContext":
         cfg = workload.cfg
+        compute = resolve_compute(workload, cost_source, latency_table)
         cuts = range(cfg.n_layers + 1)
-        dev_flops = np.array([workload.device_flops(c) for c in cuts])
-        srv_flops = np.array([workload.server_flops(c) for c in cuts])
+        dev_flops = np.array([compute.device_flops(c) for c in cuts])
+        srv_flops = np.array([compute.server_flops(c) for c in cuts])
         up_bits = np.array([8 * sim.phi * workload.smashed_bytes(
             c, sim.act_bytes) for c in cuts])
         down_bits = np.array([8 * sim.phi * workload.gradient_bytes(

@@ -7,7 +7,7 @@ is cubic in frequency, ``P = xi * f^3`` (Sec. III-B).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, Tuple
 
 import numpy as np
@@ -75,6 +75,20 @@ def make_heterogeneous_fleet(n: int, *, seed: int = 0,
         fleet.append(replace(t, name=f"device{i + 1}",
                              f_max=t.f_max * float(scales[i])))
     return tuple(fleet)
+
+
+def profile_from_throughput(name: str, flops_per_s: float, *,
+                            f_max: float = 1.0 * GIGA,
+                            **kwargs) -> DeviceProfile:
+    """Express a *measured* sustained throughput in the paper's
+    ``f * delta * sigma`` algebra (one core, delta = FLOPs/cycle at
+    ``f_max``), so a roofline-fitted host slots into CARD's closed form as
+    a device or server profile unchanged."""
+    if flops_per_s <= 0 or not np.isfinite(flops_per_s):
+        raise ValueError(f"need a positive finite throughput, got "
+                         f"{flops_per_s!r}")
+    return DeviceProfile(name=name, platform="measured", f_max=f_max,
+                         delta=flops_per_s / f_max, sigma=1, **kwargs)
 
 
 def fleet_arrays(devices) -> Dict[str, "object"]:

@@ -18,9 +18,8 @@ physical 5-Jetson testbed feeding a delay/energy model).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -28,7 +27,7 @@ from repro.core import card as card_lib
 from repro.core.channel import WirelessChannel
 from repro.core.cost_model import RoundContext, Workload
 from repro.core.hardware import DeviceProfile, SimParams
-from repro.core.splitting import SplitExecutor, merge_lora, split_lora
+from repro.core.splitting import SplitExecutor
 from repro.models.common import Params
 from repro.optim import Optimizer, apply_updates
 

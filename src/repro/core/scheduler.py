@@ -60,8 +60,8 @@ def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
                            channel_state: str, rounds: int,
                            devices: Sequence[DeviceProfile],
                            server: DeviceProfile, sim: SimParams, seed: int,
-                           static_cut: Optional[int],
-                           respect_memory: bool) -> FleetLog:
+                           static_cut: Optional[int], respect_memory: bool,
+                           cost_source: str, latency_table) -> FleetLog:
     """Reference oracle: the original triple loop, one decision at a time."""
     rng = np.random.default_rng(seed)
     channels = [WirelessChannel(channel_state, seed=seed + SEED_STRIDE * m,
@@ -81,7 +81,9 @@ def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
     for n in range(rounds):
         for m, dev in enumerate(devices):
             ctx = RoundContext(workload=workload, device=dev, server=server,
-                               channel=channels[m].draw(), sim=sim)
+                               channel=channels[m].draw(), sim=sim,
+                               cost_source=cost_source,
+                               latency_table=latency_table)
             if policy == "card":
                 d = card_lib.card(ctx, respect_memory=respect_memory)
             elif policy == "server_only":
@@ -114,7 +116,8 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                                devices: Sequence[DeviceProfile],
                                server: DeviceProfile, sim: SimParams,
                                seed: int, static_cut: Optional[int],
-                               respect_memory: bool) -> FleetLog:
+                               respect_memory: bool, cost_source: str,
+                               latency_table) -> FleetLog:
     """All channel states up front, one jitted grid evaluation per policy."""
     nd = len(devices)
     batch = draw_channel_matrix(channel_state, rounds, nd, seed=seed,
@@ -123,7 +126,9 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                                 tx_power_dbm_down=sim.tx_power_dbm_down,
                                 noise_dbm_per_hz=sim.noise_dbm_per_hz)
     workload = Workload(cfg, sim.mini_batch, sim.seq_len)
-    bctx = BatchedRoundContext.build(workload, devices, server, batch, sim)
+    bctx = BatchedRoundContext.build(workload, devices, server, batch, sim,
+                                     cost_source=cost_source,
+                                     latency_table=latency_table)
     if policy == "card":
         dec = card_lib.batched_card(bctx, respect_memory=respect_memory)
     elif policy == "server_only":
@@ -159,10 +164,19 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
                    sim: SimParams = DEFAULT_SIM, seed: int = 0,
                    static_cut: Optional[int] = None,
                    respect_memory: bool = True,
-                   engine: str = "vectorized") -> FleetLog:
+                   engine: str = "vectorized",
+                   cost_source: str = "analytic",
+                   latency_table=None) -> FleetLog:
+    """Run ``rounds`` of per-device CARD (or baseline) decisions.
+
+    ``cost_source="measured"`` routes per-cut compute delays through a
+    kernel-calibrated ``measured_cost.LatencyTable`` instead of the paper's
+    analytic FLOP counts; both engines honor it identically.
+    """
     kwargs = dict(policy=policy, channel_state=channel_state, rounds=rounds,
                   devices=devices, server=server, sim=sim, seed=seed,
-                  static_cut=static_cut, respect_memory=respect_memory)
+                  static_cut=static_cut, respect_memory=respect_memory,
+                  cost_source=cost_source, latency_table=latency_table)
     if engine == "vectorized":
         return _simulate_fleet_vectorized(cfg, **kwargs)
     if engine == "scalar":

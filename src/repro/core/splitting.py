@@ -20,7 +20,7 @@ A cut is a static argument — each cut compiles its own pair of programs and
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

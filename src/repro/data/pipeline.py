@@ -10,7 +10,7 @@ emits precomputed frame/patch embeddings per DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

@@ -6,7 +6,6 @@ program logic. On a real TPU backend ``interpret=False`` compiles to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

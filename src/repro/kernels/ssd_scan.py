@@ -23,7 +23,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(xt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, dec_ref, *,

@@ -11,10 +11,9 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
                                  TPU_V5E_PEAK_BF16)

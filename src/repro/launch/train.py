@@ -8,9 +8,8 @@ CARD cut (DESIGN.md §5).
 from __future__ import annotations
 
 import argparse
-import functools
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

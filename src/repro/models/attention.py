@@ -13,8 +13,7 @@ qk-norm (Qwen3) and QKV bias (Qwen2).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

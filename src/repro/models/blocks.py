@@ -1,7 +1,7 @@
 """Per-family layer blocks (pre-norm residual), stacked for lax.scan."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

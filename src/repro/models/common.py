@@ -7,7 +7,7 @@ jnp arrays, ``*_apply`` consumes it. Matmuls accumulate in fp32 via
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

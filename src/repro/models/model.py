@@ -14,7 +14,6 @@ is the natural server end (final norm + LM head live with the loss).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

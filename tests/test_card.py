@@ -5,7 +5,6 @@ Property tests (hypothesis) assert the system's invariants:
   * Eq. 16's closed-form f* is the argmin of the convex frequency subproblem
   * U is monotone: delay up => cost up (w fixed), energy up => cost up
 """
-import math
 
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Wireless channel: CQI/MCS mapping, pathloss states, fading draws."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -1,7 +1,6 @@
 """End-to-end SL protocol: real split fine-tuning converges (Eq. 1) and the
 fleet simulator reproduces the paper's qualitative findings (Sec. V)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -13,7 +12,7 @@ from repro.core.scheduler import compare_policies, simulate_fleet
 from repro.data import make_fleet_datasets
 from repro.models import model as M
 from repro.launch.train import run_training
-from repro.optim import adamw, constant_schedule, apply_updates
+from repro.optim import adamw, constant_schedule
 
 
 @pytest.fixture(scope="module")

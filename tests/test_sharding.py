@@ -1,7 +1,6 @@
 """Sharding rules: per-arch param specs on the production meshes
 (AbstractMesh — no devices needed, pure divisibility logic)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

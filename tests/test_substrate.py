@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import get_config
-from repro.data import DeviceDataset, make_fleet_datasets, synthetic_lm_task
+from repro.data import make_fleet_datasets, synthetic_lm_task
 from repro.models.common import init_lora_pair, lora_dense
 from repro.optim import (adamw, apply_updates, constant_schedule,
                          cosine_schedule, sgd, warmup_cosine)

@@ -1,6 +1,5 @@
 """End-to-end system tests: training driver, generation, distributed
 lowering (subprocess with 512 host devices), shard_map MoE equivalence."""
-import json
 import os
 import subprocess
 import sys
