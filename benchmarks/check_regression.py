@@ -23,6 +23,12 @@ import os
 import sys
 from typing import Dict, List, Tuple
 
+# repo root on sys.path so the splint unit registry is importable when this
+# runs as `python benchmarks/check_regression.py` from CI
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tools.splint.units import check_key_units  # noqa: E402
+
 BENCH_FILES = ("BENCH_kernels.json", "BENCH_card_calibration.json",
                "BENCH_fleet_scale.json")
 
@@ -59,6 +65,10 @@ def validate(path: str) -> List[str]:
                     or val != val or val == float("inf"):
                 errors.append(f"{path}: gate {name!r} must be a positive "
                               f"finite number, got {val!r}")
+        # gates are wall seconds by contract: every key must carry a
+        # time[s] suffix and no alias/mixed unit tokens (splint registry)
+        errors += check_key_units(gates.keys(), context=path,
+                                  require="time[s]")
     if schema == "bench-kernels/v1" and not errors:
         tables = payload["latency_tables"]
         if not tables:

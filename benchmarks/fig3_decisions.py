@@ -48,7 +48,8 @@ def run(rounds: int = 50, channel_state: str = "normal", seed: int = 0
     # paper finding 2: weaker devices offload more (cut -> 0 down the fleet)
     offload = [cut_summary[n]["frac_full_offload"] for n in log.device_names]
     out["offload_monotone_with_weakness"] = bool(
-        all(b >= a - 1e-9 for a, b in zip(offload, offload[1:])))
+        all(b >= a - 1e-9
+            for a, b in zip(offload, offload[1:], strict=False)))
     return out
 
 

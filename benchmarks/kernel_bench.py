@@ -39,6 +39,7 @@ def _time(fn: Callable, reps: int = 3) -> float:
     jax.block_until_ready(fn())  # warmup / compile
     t0 = time.perf_counter()
     for _ in range(reps):
+        # splint: ignore[trace-safety] -- timing probe: the sync IS the point
         jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / reps * 1e6  # us
 

@@ -34,8 +34,8 @@ def smoke() -> None:
                        key=lambda i: i.name):
         if info.name == "run":
             continue
-        us, _ = _timed(lambda: importlib.import_module(
-            f"benchmarks.{info.name}"))
+        us, _ = _timed(lambda name=info.name: importlib.import_module(
+            f"benchmarks.{name}"))
         rows.append((f"import_{info.name}", us, "ok"))
 
     from benchmarks import fig3_decisions, fig4_comparison, fleet_scale_bench

@@ -30,8 +30,11 @@ def save_checkpoint(path: str, tree, *, step: int = 0, extra: Dict = None
     items, _ = _flatten_with_paths(tree)
     arrays = {}
     manifest = {"step": step, "extra": extra or {}, "leaves": []}
-    for i, (key, leaf) in enumerate(items):
-        arr = np.asarray(jax.device_get(leaf))
+    # one transfer for all leaves instead of a per-leaf device sync
+    host_leaves = jax.device_get([leaf for _, leaf in items])
+    for i, ((key, _), host) in enumerate(zip(items, host_leaves,
+                                             strict=True)):
+        arr = np.asarray(host)
         name = f"leaf_{i}"
         # npz cannot hold bf16: store raw bits + dtype tag
         if arr.dtype == jax.numpy.bfloat16:

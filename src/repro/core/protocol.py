@@ -118,8 +118,10 @@ class SplitFineTuner:
         if self.cost_cfg.n_layers != self.cfg.n_layers:
             cut = round(cut * self.cfg.n_layers / self.cost_cfg.n_layers)
 
-        # Stages 2-5: T local epochs of real split training
-        loss_val = float("nan")
+        # Stages 2-5: T local epochs of real split training. Only the last
+        # epoch's loss is logged, so the device sync happens once after the
+        # loop instead of serializing every epoch.
+        loss = None
         for _ in range(self.sim.local_epochs):
             batch = self.datasets[device_idx].minibatch(
                 self.sim.mini_batch, self.sim.seq_len)
@@ -128,7 +130,7 @@ class SplitFineTuner:
             updates, self.opt_state = self.optimizer.update(
                 grads, self.opt_state, self.lora)
             self.lora = apply_updates(self.lora, updates)
-            loss_val = float(loss)
+        loss_val = float(loss) if loss is not None else float("nan")
 
         return RoundLog(round_idx=n, device=dev.name, cut=cut,
                         frequency=decision.frequency, delay=decision.delay,

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -145,16 +146,19 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
         dec = card_lib.batched_static_cut(bctx, draws)
     else:
         raise ValueError(f"unknown policy {policy!r}")
+    # one device_get for the whole decision pytree instead of eight
+    # separate device->host transfers
+    host = jax.device_get(dec)
     return FleetLog(policy=policy, channel_state=channel_state, rounds=rounds,
                     device_names=[d.name for d in devices],
-                    cuts=np.asarray(dec.cuts, np.int32),
-                    freqs=np.asarray(dec.freqs, np.float64),
-                    delays=np.asarray(dec.delays, np.float64),
-                    energies=np.asarray(dec.energies, np.float64),
-                    d_device=np.asarray(dec.d_device, np.float64),
-                    d_uplink=np.asarray(dec.d_uplink, np.float64),
-                    d_server=np.asarray(dec.d_server, np.float64),
-                    d_downlink=np.asarray(dec.d_downlink, np.float64))
+                    cuts=np.asarray(host.cuts, np.int32),
+                    freqs=np.asarray(host.freqs, np.float64),
+                    delays=np.asarray(host.delays, np.float64),
+                    energies=np.asarray(host.energies, np.float64),
+                    d_device=np.asarray(host.d_device, np.float64),
+                    d_uplink=np.asarray(host.d_uplink, np.float64),
+                    d_server=np.asarray(host.d_server, np.float64),
+                    d_downlink=np.asarray(host.d_downlink, np.float64))
 
 
 def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",

@@ -25,7 +25,8 @@ def make_abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Device-free mesh for sharding-rule checks, across JAX API revisions:
     0.4.x takes ((name, size), ...) pairs; newer takes (sizes, names)."""
     try:
-        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape,
+                                                   strict=True)))
     except TypeError:
         return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
 

@@ -115,6 +115,7 @@ class Trainer:
                 self.frozen, self.lora, self.opt_state, batch)
             self.step += 1
             if self.step % 10 == 0 or self.step == 1:
+                # splint: ignore[trace-safety] -- 1-in-10 gated metrics sync
                 self._log({"kind": "train", "loss": float(loss)})
             if eval_batches and t.eval_every \
                     and self.step % t.eval_every == 0:

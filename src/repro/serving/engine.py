@@ -102,7 +102,7 @@ class ServingEngine:
                 slot.fed = 0
                 # reset this slot's cache lanes
                 self.cache = jax.tree_util.tree_map(
-                    lambda c, z: c.at[:, slot_idx].set(z[:, slot_idx]),
+                    lambda c, z, i=slot_idx: c.at[:, i].set(z[:, i]),
                     self.cache, self._zero_cache)
 
     def tick(self) -> int:

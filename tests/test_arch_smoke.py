@@ -10,10 +10,11 @@ from repro.optim import adamw, constant_schedule, apply_updates
 
 
 def _batch(cfg, key, b=2, s=32):
-    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    k_tok, k_emb = jax.random.split(key)
+    toks = jax.random.randint(k_tok, (b, s + 1), 0, cfg.vocab_size)
     batch = {"labels": toks[:, 1:]}
     if cfg.input_mode == "embeds":
-        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+        batch["embeds"] = jax.random.normal(k_emb, (b, s, cfg.d_model),
                                             jnp.float32) * 0.02
     else:
         batch["tokens"] = toks[:, :-1]
@@ -57,13 +58,14 @@ def test_forward_and_train_step(arch):
 def test_decode_step(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(1)
-    params = M.init_params(key, cfg)
+    k_param, k_inp = jax.random.split(key)
+    params = M.init_params(k_param, cfg)
     b, max_len = 2, 16
     cache = M.init_cache(cfg, b, max_len)
     if cfg.input_mode == "embeds":
-        inp = jax.random.normal(key, (b, 1, cfg.d_model), jnp.float32)
+        inp = jax.random.normal(k_inp, (b, 1, cfg.d_model), jnp.float32)
     else:
-        inp = jax.random.randint(key, (b, 1), 0, cfg.vocab_size)
+        inp = jax.random.randint(k_inp, (b, 1), 0, cfg.vocab_size)
     logits, cache2 = M.decode_step(params["frozen"], params["lora"], cache,
                                    inp, jnp.int32(0), cfg)
     assert logits.shape == (b, cfg.vocab_size)
@@ -79,13 +81,15 @@ def test_decode_matches_forward(arch):
     """Step-by-step decode must reproduce the full-sequence forward."""
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(2)
-    params = M.init_params(key, cfg)
+    k_param, k_inp = jax.random.split(key)
+    params = M.init_params(k_param, cfg)
     b, s = 2, 12
     if cfg.input_mode == "embeds":
-        inputs = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.1
+        inputs = jax.random.normal(k_inp, (b, s, cfg.d_model),
+                                   jnp.float32) * 0.1
         step_in = lambda t: inputs[:, t:t + 1]
     else:
-        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        inputs = jax.random.randint(k_inp, (b, s), 0, cfg.vocab_size)
         step_in = lambda t: inputs[:, t:t + 1]
     x, _ = M.forward_hidden(params["frozen"], params["lora"], inputs, cfg,
                             impl="naive", remat=False)

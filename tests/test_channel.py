@@ -24,7 +24,7 @@ def test_efficiency_monotone_in_snr(snr):
 
 
 def test_efficiency_thresholds_exact():
-    for thresh, eff in zip(CQI_SNR_THRESH_DB, CQI_EFFICIENCY):
+    for thresh, eff in zip(CQI_SNR_THRESH_DB, CQI_EFFICIENCY, strict=True):
         assert snr_to_efficiency(thresh) == pytest.approx(eff)
         assert snr_to_efficiency(thresh - 0.01) < eff or eff == CQI_EFFICIENCY[0]
 

@@ -1,0 +1,126 @@
+"""Block-shape edge cases: sequence lengths not divisible by the Pallas
+block size, exercising the pad-to-multiple + mask path that splint's
+grid-divisibility detector reasons about (`(-s) % block` guards in
+flash_attention/flash_decode/lora_matmul/ssd_scan).
+
+Each case pins the ragged geometry explicitly: one element past a block
+boundary, one element short, a window crossing the padded tail, and the
+partial-final-block decode slots.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.attention import naive_attention
+
+
+def _qkv(key, b, sq, skv, hq, hkv, d):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, hq, d))
+    k = jax.random.normal(kk, (b, skv, hkv, d))
+    v = jax.random.normal(kv, (b, skv, hkv, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,window", [
+    (65, 0),     # one past the block boundary: 1-row ragged tail
+    (63, 0),     # one short: single partial block, no full block
+    (130, 64),   # window crosses the padded tail of the last KV block
+    (127, 32),   # partial final block + window entirely inside it
+])
+def test_flash_attention_ragged_seq(s, window):
+    q, k, v = _qkv(jax.random.PRNGKey(10), 2, s, s, 4, 4, 16)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    pos = jnp.broadcast_to(jnp.arange(s), (2, s))
+    want = naive_attention(q, k, v, causal=True, window=window,
+                           q_positions=pos, k_positions=pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_gqa_ragged():
+    q, k, v = _qkv(jax.random.PRNGKey(11), 1, 65, 65, 8, 2, 16)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    pos = jnp.broadcast_to(jnp.arange(65), (1, 65))
+    want = naive_attention(q, k, v, causal=True, window=0,
+                           q_positions=pos, k_positions=pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_block_larger_than_seq():
+    # block is clamped to the sequence: no padding at all
+    q, k, v = _qkv(jax.random.PRNGKey(12), 2, 40, 40, 4, 4, 16)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    pos = jnp.broadcast_to(jnp.arange(40), (2, 40))
+    want = naive_attention(q, k, v, causal=True, window=0,
+                           q_positions=pos, k_positions=pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("s,t,block_k", [
+    (70, 69, 64),   # t lands in the 6-slot partial final block
+    (70, 64, 64),   # t is the first slot of the partial block
+    (70, 63, 64),   # valid slots end exactly at the block boundary
+    (33, 32, 64),   # cache smaller than the block: block clamps, no pad
+])
+def test_flash_decode_ragged_cache(s, t, block_k):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(13), 3)
+    b, hq, hkv, d = 2, 4, 2, 16
+    q = jax.random.normal(kq, (b, 1, hq, d))
+    k = jax.random.normal(kk, (b, s, hkv, d))
+    v = jax.random.normal(kv, (b, s, hkv, d))
+    got = ops.flash_decode(q, k, v, jnp.int32(t), block_k=block_k)
+    pos = jnp.full((b, 1), t, jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    want = naive_attention(q, k, v, causal=True, window=0,
+                           q_positions=pos, k_positions=kpos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_decode_ring_buffer_ragged():
+    # window == slots ring buffer whose slot count is not a block multiple
+    s, window, t, block_k = 48, 48, 100, 32
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(14), 3)
+    b, hq, hkv, d = 1, 4, 4, 16
+    q = jax.random.normal(kq, (b, 1, hq, d))
+    k = jax.random.normal(kk, (b, s, hkv, d))
+    v = jax.random.normal(kv, (b, s, hkv, d))
+    got = ops.flash_decode(q, k, v, jnp.int32(t), window=window,
+                           block_k=block_k)
+    j = jnp.arange(s, dtype=jnp.int32)
+    abs_pos = t - ((t - j) % s)
+    abs_pos = jnp.where(abs_pos >= 0, abs_pos, 2 ** 30)
+    pos = jnp.full((b, 1), t, jnp.int32)
+    want = naive_attention(q, k, v, causal=True, window=window,
+                           q_positions=pos,
+                           k_positions=jnp.broadcast_to(abs_pos, (b, s)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_lora_matmul_prime_shapes():
+    # every dimension ragged against every block
+    m, k, n, r = 37, 53, 41, 3
+    kk = jax.random.split(jax.random.PRNGKey(15), 4)
+    x = jax.random.normal(kk[0], (m, k))
+    w = jax.random.normal(kk[1], (k, n))
+    a = jax.random.normal(kk[2], (k, r))
+    b = jax.random.normal(kk[3], (r, n))
+    got = ops.lora_matmul(x, w, a, b, 0.25, bm=32, bn=32, bk=32)
+    want = ref.lora_matmul_ref(x, w, a, b, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_ssd_scan_ragged_chunks():
+    l, nh, hp, ns, chunk = 70, 2, 16, 16, 32   # 70 = 2 chunks + 6 tail
+    kk = jax.random.split(jax.random.PRNGKey(16), 4)
+    xt = jax.random.normal(kk[0], (2, l, nh, hp)) * 0.2
+    a = -jnp.abs(jax.random.normal(kk[1], (2, l, nh))) * 0.1
+    B = jax.random.normal(kk[2], (2, l, ns)) * 0.3
+    C = jax.random.normal(kk[3], (2, l, ns)) * 0.3
+    y1, h1 = ops.ssd_scan(xt, a, B, C, chunk)
+    from repro.models.mamba import ssd_chunked
+    y2, h2 = ssd_chunked(xt, a, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)

@@ -36,7 +36,7 @@ def test_param_specs_divisible(arch, mesh):
     flat_s, _ = jax.tree_util.tree_flatten(
         specs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_a) == len(flat_s)
-    for aval, spec in zip(flat_a, flat_s):
+    for aval, spec in zip(flat_a, flat_s, strict=True):
         assert len(spec) <= len(aval.shape)
         for dim, axis in enumerate(spec):
             if axis is None:
@@ -57,7 +57,7 @@ def test_big_models_fit_per_chip(arch):
     flat_a, _ = jax.tree_util.tree_flatten(avals["frozen"])
     flat_s, _ = jax.tree_util.tree_flatten(
         specs["frozen"], is_leaf=lambda x: isinstance(x, P))
-    for aval, spec in zip(flat_a, flat_s):
+    for aval, spec in zip(flat_a, flat_s, strict=True):
         shards = 1
         for axis in spec:
             shards *= _axis_product(MESH_2POD, axis)

@@ -1,0 +1,468 @@
+"""Unit tests for splint (tools/splint): one positive and one negative
+case per detector, plus pragma/baseline/report plumbing and the
+unit-suffix payload-key validation used by benchmarks/check_regression.py.
+
+These tests are pure-stdlib (no JAX import) — splint analyzes source text.
+"""
+import sys
+import textwrap
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.splint import engine  # noqa: E402
+from tools.splint.units import check_key_units, dimension_of  # noqa: E402
+
+
+def rules_of(src, rule=None):
+    findings = engine.scan_source(textwrap.dedent(src), "snippet.py")
+    if rule is None:
+        return findings
+    return [f for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# trace-safety
+# ---------------------------------------------------------------------------
+
+
+def test_trace_safety_flags_if_on_traced_value():
+    found = rules_of("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """, "trace-safety")
+    assert len(found) == 1 and "Python `if`" in found[0].message
+
+
+def test_trace_safety_ok_static_args_and_shapes():
+    found = rules_of("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            if n > 2 and x.ndim == 2:
+                return x * x.shape[0]
+            return x
+    """, "trace-safety")
+    assert found == []
+
+
+def test_trace_safety_flags_host_cast_under_jit():
+    found = rules_of("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = x * 2
+            return float(y)
+    """, "trace-safety")
+    assert len(found) == 1 and "float" in found[0].message
+
+
+def test_trace_safety_flags_per_iteration_sync_in_loop():
+    found = rules_of("""
+        def run(fn, xs):
+            out = []
+            for x in xs:
+                r = fn(x)
+                out.append(float(r))
+            return out
+    """, "trace-safety")
+    assert len(found) == 1 and "every loop iteration" in found[0].message
+
+
+def test_trace_safety_ok_sync_after_loop():
+    found = rules_of("""
+        def run(fn, xs):
+            out = []
+            for x in xs:
+                out.append(fn(x))
+            return [float(r) for r in out]
+    """, "trace-safety")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# jit-hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_jit_hygiene_flags_import_time_jnp():
+    found = rules_of("""
+        import jax.numpy as jnp
+
+        TABLE = jnp.arange(16) * 2.0
+    """, "jit-hygiene")
+    assert len(found) == 1 and "import time" in found[0].message
+
+
+def test_jit_hygiene_ok_numpy_constants_and_main_guard():
+    found = rules_of("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        TABLE = np.arange(16) * 2.0
+
+        def f():
+            return jnp.asarray(TABLE)
+
+        if __name__ == "__main__":
+            print(jnp.arange(4))
+    """, "jit-hygiene")
+    assert found == []
+
+
+def test_jit_hygiene_flags_jit_inside_loop():
+    found = rules_of("""
+        import jax
+
+        def sweep(fns, x):
+            outs = []
+            for fn in fns:
+                outs.append(jax.jit(fn)(x))
+            return outs
+    """, "jit-hygiene")
+    assert len(found) == 1 and "inside a loop" in found[0].message
+
+
+def test_jit_hygiene_flags_unknown_static_argname():
+    found = rules_of("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("m",))
+        def f(x, n):
+            return x * n
+    """, "jit-hygiene")
+    assert len(found) == 1 and "no such parameter" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# pallas-block
+# ---------------------------------------------------------------------------
+
+_PALLAS_OK = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _k(x_ref, o_ref, acc_ref):
+        i = pl.program_id(1)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += x_ref[...]
+        o_ref[...] = acc_ref[...]
+
+    def f(x):
+        n = x.shape[0]
+        bn = 128
+        pad = (-n) % bn
+        return pl.pallas_call(
+            _k,
+            grid=(4, n // bn),
+            in_specs=[pl.BlockSpec((1, bn), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        )(x)
+"""
+
+
+def test_pallas_ok_well_formed_call():
+    assert rules_of(_PALLAS_OK, "pallas-block") == []
+
+
+def test_pallas_flags_index_map_arity():
+    bad = _PALLAS_OK.replace("in_specs=[pl.BlockSpec((1, bn), "
+                             "lambda i, j: (i, j))]",
+                             "in_specs=[pl.BlockSpec((1, bn), "
+                             "lambda i: (i, 0))]")
+    found = rules_of(bad, "pallas-block")
+    assert len(found) == 1 and "index map takes 1 args" in found[0].message
+
+
+def test_pallas_flags_kernel_signature_mismatch():
+    bad = _PALLAS_OK.replace("def _k(x_ref, o_ref, acc_ref):",
+                             "def _k(x_ref, o_ref, acc_ref, extra_ref):")
+    found = rules_of(bad, "pallas-block")
+    assert any("takes 4 positional refs but pallas_call provides 3"
+               in f.message for f in found)
+
+
+def test_pallas_flags_unguarded_accumulator():
+    bad = _PALLAS_OK.replace("@pl.when(i == 0)", "@pl.when(i == 1)")
+    found = rules_of(bad, "pallas-block")
+    assert len(found) == 1 and "acc_ref" in found[0].message \
+        and "pl.when" in found[0].message
+
+
+def test_pallas_flags_unguarded_griddiv():
+    bad = _PALLAS_OK.replace("pad = (-n) % bn", "pad = 0")
+    found = rules_of(bad, "pallas-block")
+    assert len(found) == 1 and "floor-divides" in found[0].message
+
+
+def test_pallas_flags_unaligned_tile():
+    bad = _PALLAS_OK.replace("bn = 128", "bn = 200")
+    found = rules_of(bad, "pallas-block")
+    assert any("not lane-aligned" in f.message for f in found)
+
+
+# ---------------------------------------------------------------------------
+# unit-suffix
+# ---------------------------------------------------------------------------
+
+
+def test_unit_suffix_flags_mixed_addition():
+    found = rules_of("""
+        def cost(delay_s, energy_joules):
+            return delay_s + energy_joules
+    """, "unit-suffix")
+    assert len(found) == 1 and "time[s]" in found[0].message \
+        and "energy[J]" in found[0].message
+
+
+def test_unit_suffix_flags_scale_mismatch_and_compare():
+    src = """
+        def f(a_ms, b_s, budget_joules):
+            t = a_ms + b_s
+            if b_s > budget_joules:
+                return t
+            return 0.0
+    """
+    found = rules_of(src, "unit-suffix")
+    assert len(found) == 2
+
+
+def test_unit_suffix_ok_same_dimension_and_rates():
+    found = rules_of("""
+        def f(up_s, down_s, link_bytes, rate_bytes_per_s):
+            total_s = up_s + down_s
+            t_s = link_bytes / rate_bytes_per_s
+            return total_s + t_s
+    """, "unit-suffix")
+    assert found == []
+    assert dimension_of("rate_bytes_per_s") == "data[byte]/time[s]"
+
+
+# ---------------------------------------------------------------------------
+# prng-reuse
+# ---------------------------------------------------------------------------
+
+
+def test_prng_flags_reused_key():
+    found = rules_of("""
+        import jax
+
+        def make(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))
+            return a, b
+    """, "prng-reuse")
+    assert len(found) == 1 and "already consumed" in found[0].message
+
+
+def test_prng_ok_split_keys_and_exclusive_branches():
+    found = rules_of("""
+        import jax
+
+        def make(key, mode):
+            keys = jax.random.split(key, 2)
+            a = jax.random.normal(keys[0], (4,))
+            if mode == "u":
+                b = jax.random.uniform(keys[1], (4,))
+            else:
+                b = jax.random.normal(keys[1], (4,))
+            return a, b
+    """, "prng-reuse")
+    assert found == []
+
+
+def test_prng_flags_unsplit_key_in_loop():
+    found = rules_of("""
+        import jax
+
+        def draws(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.normal(key, (4,)))
+            return out
+    """, "prng-reuse")
+    assert len(found) == 1 and "loop" in found[0].message
+
+
+def test_prng_ok_resplit_in_loop():
+    found = rules_of("""
+        import jax
+
+        def draws(key, n):
+            out = []
+            for _ in range(n):
+                key, sub = jax.random.split(key)
+                out.append(jax.random.normal(sub, (4,)))
+            return out
+    """, "prng-reuse")
+    assert found == []
+
+
+def test_prng_ignores_stdlib_random():
+    found = rules_of("""
+        import random
+
+        def jitter():
+            return random.uniform(0.0, 1.0) + random.uniform(0.0, 1.0)
+    """, "prng-reuse")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-promo
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_promo_flags_strong_numpy_scalar():
+    found = rules_of("""
+        import numpy as np
+
+        def scale(x):
+            return np.float64(0.5) * x
+    """, "dtype-promo")
+    assert len(found) == 1 and "strong-typed" in found[0].message
+
+
+def test_dtype_promo_flags_untyped_scalar_array():
+    found = rules_of("""
+        import jax.numpy as jnp
+
+        def scale(x):
+            return x * jnp.array(0.5)
+    """, "dtype-promo")
+    assert len(found) == 1 and "without dtype=" in found[0].message
+
+
+def test_dtype_promo_ok_weak_python_literal():
+    found = rules_of("""
+        import jax.numpy as jnp
+
+        def scale(x):
+            return 0.5 * x + jnp.array(0.5, dtype=x.dtype)
+    """, "dtype-promo")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas / baseline / report
+# ---------------------------------------------------------------------------
+
+_NOISY = """\
+import jax
+
+@jax.jit
+def f(x):
+    return float(x)
+"""
+
+
+def _suppressed(src):
+    findings = engine.scan_source(src, "snippet.py")
+    pragmas = engine.Pragmas(src.splitlines())
+    return [f for f in findings if not pragmas.suppresses(f)]
+
+
+def test_pragma_same_line():
+    src = _NOISY.replace("return float(x)",
+                         "return float(x)  # splint: ignore[trace-safety]")
+    assert engine.scan_source(src, "x.py") != []
+    assert _suppressed(src) == []
+
+
+def test_pragma_comment_line_above():
+    src = _NOISY.replace(
+        "    return float(x)",
+        "    # splint: ignore[trace-safety] -- justification here\n"
+        "    return float(x)")
+    assert _suppressed(src) == []
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    src = _NOISY.replace("return float(x)",
+                         "return float(x)  # splint: ignore[unit-suffix]")
+    assert len(_suppressed(src)) == 1
+
+
+def test_pragma_ignore_file():
+    src = "# splint: ignore-file[trace-safety]\n" + _NOISY
+    assert _suppressed(src) == []
+
+
+def test_baseline_counts_ratchet():
+    findings = engine.scan_source(_NOISY + _NOISY.replace("def f", "def g"),
+                                  "x.py")
+    assert len(findings) == 2
+    baseline = {findings[0].fingerprint: 1}
+    new, old = engine.split_new(findings, baseline)
+    assert len(old) == 1 and len(new) == 1
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = engine.scan_source(_NOISY, "x.py")
+    p = tmp_path / "baseline.json"
+    engine.write_baseline(p, findings)
+    assert engine.load_baseline(p) == {findings[0].fingerprint: 1}
+    new, old = engine.split_new(findings, engine.load_baseline(p))
+    assert new == [] and len(old) == 1
+
+
+def test_report_schema(tmp_path):
+    src_file = tmp_path / "mod.py"
+    src_file.write_text(_NOISY)
+    result = engine.scan_files([str(tmp_path)])
+    report = engine.report_dict(result, result.findings, [])
+    assert report["schema"] == "splint-report/v1"
+    assert report["counts"]["new"] == 1
+    assert report["new"][0]["rule"] == "trace-safety"
+
+
+def test_repo_src_is_clean():
+    """The acceptance criterion: 0 unsuppressed findings on src/."""
+    result = engine.scan_files([str(REPO_ROOT / "src")])
+    assert [f.format() for f in result.findings] == []
+
+
+# ---------------------------------------------------------------------------
+# payload-key units (benchmarks/check_regression.py wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_key_units_accepts_repo_gate_keys():
+    keys = ["probe_lora_matmul_128x128x128r8_s", "batched_card_round_s_5dev",
+            "batched_card_round_s_1000dev_big", "mean_energy_j"]
+    assert check_key_units(keys) == []
+    assert check_key_units(keys[:3], require="time[s]") == []
+
+
+def test_key_units_rejects_alias_suffix():
+    errs = check_key_units(["round_secs"])
+    assert len(errs) == 1 and "'secs'" in errs[0]
+
+
+def test_key_units_rejects_mixed_dimensions():
+    errs = check_key_units(["energy_joules_per_round_s"])
+    assert errs and "mixes unit suffixes" in errs[0]
+
+
+def test_key_units_require_dimension():
+    errs = check_key_units(["gate_speedup"], require="time[s]")
+    assert len(errs) == 1 and "no unit suffix" in errs[0]

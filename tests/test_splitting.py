@@ -40,7 +40,7 @@ def test_split_grads_match_full_model(setup, cut_frac):
     assert float(loss) == pytest.approx(float(ref_loss), rel=1e-5)
     merged = merge_lora(gd, gs)
     for a, b in zip(jax.tree_util.tree_leaves(merged),
-                    jax.tree_util.tree_leaves(ref_grads)):
+                    jax.tree_util.tree_leaves(ref_grads), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
@@ -50,7 +50,8 @@ def test_split_merge_roundtrip(setup):
         d, s = split_lora(params["lora"], cut)
         m = merge_lora(d, s)
         for a, b in zip(jax.tree_util.tree_leaves(m),
-                        jax.tree_util.tree_leaves(params["lora"])):
+                        jax.tree_util.tree_leaves(params["lora"]),
+                        strict=True):
             assert a.shape == b.shape
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

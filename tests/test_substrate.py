@@ -75,7 +75,7 @@ def test_checkpoint_roundtrip(tmp_path):
     restored, step = load_checkpoint(path, like)
     assert step == 17
     for a, b in zip(jax.tree_util.tree_leaves(tree),
-                    jax.tree_util.tree_leaves(restored)):
+                    jax.tree_util.tree_leaves(restored), strict=True):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))

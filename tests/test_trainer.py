@@ -48,7 +48,7 @@ def test_trainer_restore_resumes(setup, tmp_path):
     assert tr2.step == 6
     # restored params identical to the saved state
     for a, b in zip(jax.tree_util.tree_leaves(tr1.lora),
-                    jax.tree_util.tree_leaves(tr2.lora)):
+                    jax.tree_util.tree_leaves(tr2.lora), strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
     # and training continues past the restored step

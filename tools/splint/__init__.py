@@ -1,0 +1,12 @@
+"""splint — repo-native static analysis for JAX trace-safety, Pallas
+kernel constraints, and cost-model unit consistency.
+
+Run as ``python -m tools.splint src benchmarks tests``; see
+``tools/splint/README.md`` for the rule catalog and baseline workflow.
+"""
+from tools.splint.engine import (Finding, RULES, load_baseline,  # noqa: F401
+                                 scan_files, scan_source, split_new,
+                                 write_baseline)
+from tools.splint.units import (ALIAS_SUFFIXES, UNIT_SUFFIXES,  # noqa: F401
+                                check_key_units, dimension_of,
+                                key_dimensions)

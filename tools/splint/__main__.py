@@ -1,0 +1,74 @@
+"""splint CLI.
+
+Usage:
+    python -m tools.splint src benchmarks tests \
+        --baseline tools/splint/baseline.json --json splint_report.json
+
+Exit status is 1 iff there are unsuppressed findings not covered by the
+baseline.  ``--write-baseline`` accepts the current findings as the new
+baseline (the ratchet reset — review the diff before committing it).
+``--all`` prints baselined findings too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.splint import engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="splint",
+        description="repo-native static analysis (JAX trace-safety, "
+                    "Pallas constraints, unit suffixes)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline JSON of accepted findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings")
+    ap.add_argument("--json", type=Path, default=None, metavar="OUT",
+                    help="write the machine-readable report here")
+    ap.add_argument("--all", action="store_true",
+                    help="also print baselined findings")
+    args = ap.parse_args(argv)
+
+    result = engine.scan_files(args.paths)
+
+    if args.write_baseline:
+        if args.baseline is None:
+            ap.error("--write-baseline requires --baseline")
+        counts = engine.write_baseline(args.baseline, result.findings)
+        print(f"splint: wrote {sum(counts.values())} finding(s) "
+              f"({len(counts)} fingerprint(s)) to {args.baseline}")
+        return 0
+
+    baseline = engine.load_baseline(args.baseline)
+    new, baselined = engine.split_new(result.findings, baseline)
+
+    for f in new:
+        print(f.format())
+    if args.all:
+        for f in baselined:
+            print(f"{f.format()} [baselined]")
+
+    if args.json:
+        args.json.write_text(
+            json.dumps(engine.report_dict(result, new, baselined),
+                       indent=1) + "\n")
+
+    stale = sum(baseline.values()) - len(baselined)
+    summary = (f"splint: {result.files_scanned} file(s), "
+               f"{len(new)} new, {len(baselined)} baselined, "
+               f"{len(result.suppressed)} suppressed")
+    if stale > 0:
+        summary += (f"; {stale} baseline entr(y/ies) no longer fire "
+                    f"— re-run with --write-baseline to ratchet down")
+    print(summary)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""dtype-promo rule: strong-typed scalars widening f32/bf16 hot paths.
+
+Python float literals are *weak*-typed in JAX — ``x * 0.5`` keeps a bf16
+array bf16 — so those are fine and never flagged.  What silently widens
+is a **strong**-typed NumPy scalar or 0-d array:
+
+* ``np.float64(x) * arr`` / ``np.float32(x) + bf16_arr`` — NumPy scalar
+  types carry a committed dtype that wins the promotion, upcasting a
+  bf16 kernel input to f32 (or f32 to f64 where x64 is enabled);
+* ``jnp.array(0.5) * arr`` / ``np.array(0.5) + arr`` without an explicit
+  ``dtype=`` — the scalar commits to float32/float64 and promotes.
+
+The fix is a plain Python literal, or an explicit ``dtype=`` /
+``.astype`` matching the array being touched.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from tools.splint.engine import Finding, call_name
+
+RULE = "dtype-promo"
+
+_STRONG_SCALAR_CALLS = {
+    "np.float64", "np.float32", "np.float16", "numpy.float64",
+    "numpy.float32", "numpy.float16",
+}
+_ARRAY_CALLS = {"np.array", "numpy.array", "jnp.array", "jax.numpy.array"}
+
+
+def _strong_operand(node: ast.AST) -> Optional[str]:
+    """Describe node if it is a strong-typed scalar expression."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = call_name(node)
+    if name in _STRONG_SCALAR_CALLS:
+        return f"`{name}(...)` (strong-typed NumPy scalar)"
+    if name in _ARRAY_CALLS and node.args \
+            and isinstance(node.args[0], ast.Constant) \
+            and isinstance(node.args[0].value, float) \
+            and not any(kw.arg == "dtype" for kw in node.keywords):
+        return f"`{name}({node.args[0].value})` without dtype="
+    return None
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.BinOp):
+            continue
+        for side in (node.left, node.right):
+            desc = _strong_operand(side)
+            if desc:
+                findings.append(Finding(
+                    RULE, path, side.lineno, side.col_offset,
+                    f"{desc} in arithmetic promotes f32/bf16 arrays; use a "
+                    f"Python float literal or an explicit dtype"))
+    return findings

@@ -1,0 +1,291 @@
+"""splint engine: file scanning, pragma suppression, baseline, reporting.
+
+The engine is deliberately pure-stdlib (``ast`` + ``json``) so the CI
+static-analysis job never needs JAX installed — splint reasons about the
+source, it does not import it.
+
+Suppression layers, innermost first:
+
+  1. ``# splint: ignore[rule-a,rule-b]`` — same line as the finding, or on
+     a standalone comment line directly above it. ``# splint: ignore``
+     (no bracket) suppresses every rule on that line.
+  2. ``# splint: ignore-file[rule]`` anywhere in the file — suppresses the
+     rule for the whole file.
+  3. ``tools/splint/baseline.json`` — fingerprint counts of accepted
+     pre-existing findings; only findings *beyond* the baselined count
+     fail the run (the ratchet: the baseline may shrink, never grow).
+
+Fingerprints are line-number-free (``path::rule::message``) so unrelated
+edits above a baselined finding do not resurrect it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+BASELINE_SCHEMA = "splint-baseline/v1"
+REPORT_SCHEMA = "splint-report/v1"
+
+RULES = (
+    "trace-safety",   # host syncs / Python control flow on traced values
+    "jit-hygiene",    # recompilation triggers, import-time jnp compute
+    "pallas-block",   # BlockSpec arity, grid divisibility, accumulator init
+    "unit-suffix",    # arithmetic mixing incompatible unit-suffixed names
+    "prng-reuse",     # jax.random keys consumed more than once / in loops
+    "dtype-promo",    # strong-typed scalars widening f32/bf16 hot paths
+    "parse-error",    # file does not parse (always reported)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.path}::{self.rule}::{self.message}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "fingerprint": self.fingerprint}
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the detectors
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+def add_parents(tree: ast.AST) -> None:
+    """Attach ``.splint_parent`` links (detectors climb them for context)."""
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child.splint_parent = parent  # type: ignore[attr-defined]
+
+
+def parent_of(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "splint_parent", None)
+
+
+def const_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """A literal str or tuple/list of str constants, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append(el.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def const_int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Pragmas
+# ---------------------------------------------------------------------------
+
+_PRAGMA = re.compile(r"#\s*splint:\s*ignore(?:\[([a-z0-9_,\s\-]+)\])?",
+                     re.IGNORECASE)
+_FILE_PRAGMA = re.compile(r"#\s*splint:\s*ignore-file(?:\[([a-z0-9_,\s\-]+)\])?",
+                          re.IGNORECASE)
+
+
+class Pragmas:
+    """Per-file suppression map parsed from comments."""
+
+    def __init__(self, lines: Sequence[str]):
+        self.line_rules: Dict[int, Optional[set]] = {}  # None = all rules
+        self.file_rules: Optional[set] = set()          # None = all rules
+        self._file_all = False
+        for i, text in enumerate(lines, start=1):
+            m = _FILE_PRAGMA.search(text)
+            if m:
+                if m.group(1) is None:
+                    self._file_all = True
+                else:
+                    self.file_rules.update(
+                        r.strip() for r in m.group(1).split(",") if r.strip())
+                continue
+            m = _PRAGMA.search(text)
+            if m:
+                rules = (None if m.group(1) is None else
+                         {r.strip() for r in m.group(1).split(",")
+                          if r.strip()})
+                targets = [i]
+                # a standalone comment line suppresses the next line too
+                if text.lstrip().startswith("#"):
+                    targets.append(i + 1)
+                for t in targets:
+                    if rules is None or self.line_rules.get(t, set()) is None:
+                        self.line_rules[t] = None
+                    else:
+                        cur = self.line_rules.setdefault(t, set())
+                        cur.update(rules)
+
+    def suppresses(self, finding: Finding) -> bool:
+        if finding.rule == "parse-error":
+            return False
+        if self._file_all or finding.rule in (self.file_rules or ()):
+            return True
+        if finding.line in self.line_rules:
+            rules = self.line_rules[finding.line]
+            return rules is None or finding.rule in rules
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Optional[Path]) -> Dict[str, int]:
+    if path is None or not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    if data.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: not a splint baseline "
+                         f"(schema={data.get('schema')!r})")
+    return dict(data.get("findings", {}))
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.fingerprint] = counts.get(f.fingerprint, 0) + 1
+    payload = {"schema": BASELINE_SCHEMA,
+               "findings": dict(sorted(counts.items()))}
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return counts
+
+
+def split_new(findings: Sequence[Finding],
+              baseline: Dict[str, int]) -> Tuple[List[Finding], List[Finding]]:
+    """Partition into (new, baselined) honoring per-fingerprint counts."""
+    budget = dict(baseline)
+    new, old = [], []
+    for f in findings:
+        if budget.get(f.fingerprint, 0) > 0:
+            budget[f.fingerprint] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def iter_py_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    # never lint vendored stubs or splint itself scanning its own fixtures
+    return [p for p in out if "_stubs" not in p.parts
+            and "__pycache__" not in p.parts]
+
+
+def default_checkers():
+    from tools.splint import (dtype_rules, jit_hygiene, pallas_rules,
+                              prng_rules, trace_safety, units)
+    return [trace_safety.check, jit_hygiene.check, pallas_rules.check,
+            units.check, prng_rules.check, dtype_rules.check]
+
+
+@dataclasses.dataclass
+class ScanResult:
+    findings: List[Finding]          # active (unsuppressed) findings
+    suppressed: List[Finding]        # pragma-suppressed
+    files_scanned: int
+
+
+def scan_source(src: str, path: str, checkers=None) -> List[Finding]:
+    """All findings for one source blob (no pragma filtering) — the unit
+    of testing for the detectors."""
+    checkers = checkers if checkers is not None else default_checkers()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("parse-error", path, e.lineno or 0, e.offset or 0,
+                        f"syntax error: {e.msg}")]
+    add_parents(tree)
+    lines = src.splitlines()
+    findings: List[Finding] = []
+    for check in checkers:
+        findings.extend(check(tree, lines, path))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def scan_files(paths: Sequence[str], checkers=None) -> ScanResult:
+    files = iter_py_files(paths)
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for fp in files:
+        src = fp.read_text()
+        rel = fp.as_posix()
+        found = scan_source(src, rel, checkers)
+        pragmas = Pragmas(src.splitlines())
+        for f in found:
+            (suppressed if pragmas.suppresses(f) else active).append(f)
+    return ScanResult(findings=active, suppressed=suppressed,
+                      files_scanned=len(files))
+
+
+def report_dict(result: ScanResult, new: Sequence[Finding],
+                baselined: Sequence[Finding]) -> Dict:
+    return {
+        "schema": REPORT_SCHEMA,
+        "files_scanned": result.files_scanned,
+        "counts": {"new": len(new), "baselined": len(baselined),
+                   "suppressed": len(result.suppressed)},
+        "new": [f.to_dict() for f in new],
+        "baselined": [f.to_dict() for f in baselined],
+        "suppressed": [f.to_dict() for f in result.suppressed],
+    }

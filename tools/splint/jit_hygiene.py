@@ -1,0 +1,163 @@
+"""jit-hygiene rule: recompilation triggers and import-time device work.
+
+Detected:
+
+* ``jnp.*`` / ``jax.random.*`` / ``jax.numpy.*`` computation executed at
+  module import time (module top level or class body, outside any
+  function and outside ``if __name__ == "__main__":``).  Import-time jnp
+  initializes the backend and bakes arrays into module state before any
+  config (``jax.config.update``) can run; keep module constants in
+  NumPy and convert at trace time.
+* ``jax.jit(...)`` called inside a loop body — re-wrapping per iteration
+  defeats the compile cache keyed on the wrapper object.
+* ``static_argnames`` naming a parameter the jitted function doesn't
+  have (silent: JAX only errors when the name is passed), and
+  ``static_argnums`` out of range of the positional parameter list.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from tools.splint.engine import (Finding, call_name, const_int_tuple,
+                                 const_str_tuple, dotted, parent_of)
+
+RULE = "jit-hygiene"
+
+_IMPORT_TIME_ROOTS = ("jnp.", "jax.numpy.", "jax.random.")
+_JIT_CALLS = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _is_main_guard(node: ast.If) -> bool:
+    t = node.test
+    return (isinstance(t, ast.Compare) and isinstance(t.left, ast.Name)
+            and t.left.id == "__name__")
+
+
+def _module_level_stmts(tree: ast.Module):
+    """Statements executed at import time: module body and class bodies,
+    recursing through top-level ``if``/``try`` but not into functions or
+    the ``__main__`` guard."""
+    stack = list(tree.body)
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(stmt, ast.If):
+            if _is_main_guard(stmt):
+                continue
+            stack.extend(stmt.body)
+            stack.extend(stmt.orelse)
+            continue
+        if isinstance(stmt, ast.Try):
+            stack.extend(stmt.body)
+            for h in stmt.handlers:
+                stack.extend(h.body)
+            stack.extend(stmt.orelse)
+            stack.extend(stmt.finalbody)
+            continue
+        if isinstance(stmt, ast.ClassDef):
+            stack.extend(stmt.body)
+            continue
+        yield stmt
+
+
+def _walk_skipping_defs(stmt: ast.stmt):
+    """Walk a statement's expressions without descending into nested
+    function bodies (those run at call time, not import time)."""
+    stack = [stmt]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                # defaults/decorators DO evaluate at import time
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    stack.extend(child.decorator_list)
+                    stack.extend(child.args.defaults)
+                    stack.extend(d for d in child.args.kw_defaults if d)
+                continue
+            stack.append(child)
+
+
+def _fn_params(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _check_static_args(call: ast.Call, path: str,
+                       findings: List[Finding]) -> None:
+    """Validate static_argnames/static_argnums when the jitted target is a
+    plain function whose def is findable (decorator form handled via the
+    decorated FunctionDef parent; call form via Name lookup is skipped —
+    we only validate the decorator idiom, which is what the repo uses)."""
+    fn = None
+    p = parent_of(call)
+    if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+            and call in p.decorator_list:
+        fn = p
+    if fn is None:
+        return
+    params = _fn_params(fn)
+    pos_params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = const_str_tuple(kw.value)
+            for name in names or ():
+                if name not in params:
+                    findings.append(Finding(
+                        RULE, path, call.lineno, call.col_offset,
+                        f"static_argnames names `{name}` but `{fn.name}` "
+                        f"has no such parameter (silently non-static)"))
+        elif kw.arg == "static_argnums":
+            nums = const_int_tuple(kw.value)
+            for i in nums or ():
+                if not (-len(pos_params) <= i < len(pos_params)):
+                    findings.append(Finding(
+                        RULE, path, call.lineno, call.col_offset,
+                        f"static_argnums index {i} out of range for "
+                        f"`{fn.name}` ({len(pos_params)} positional params)"))
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # -- import-time jnp work ------------------------------------------------
+    if isinstance(tree, ast.Module):
+        for stmt in _module_level_stmts(tree):
+            for node in _walk_skipping_defs(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name and name.startswith(_IMPORT_TIME_ROOTS):
+                    findings.append(Finding(
+                        RULE, path, node.lineno, node.col_offset,
+                        f"`{name}` runs at module import time; build "
+                        f"constants with numpy and convert at trace time"))
+
+    # -- jax.jit in loops + static_arg validation ----------------------------
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        is_jit = name in _JIT_CALLS or (
+            name in _PARTIAL_NAMES and node.args
+            and dotted(node.args[0]) in _JIT_CALLS)
+        if not is_jit:
+            continue
+        _check_static_args(node, path, findings)
+        p = parent_of(node)
+        while p is not None:
+            if isinstance(p, (ast.For, ast.While)):
+                findings.append(Finding(
+                    RULE, path, node.lineno, node.col_offset,
+                    "`jax.jit` called inside a loop creates a fresh "
+                    "compile-cache entry per iteration; jit once outside"))
+                break
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node in p.decorator_list:
+                break
+            p = parent_of(p)
+    return findings

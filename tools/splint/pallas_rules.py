@@ -1,0 +1,306 @@
+"""pallas-block rule: structural constraints on ``pl.pallas_call`` sites.
+
+Checked per call site (kernel resolution is purely syntactic — splint
+never imports JAX):
+
+* **index-map arity** — every ``pl.BlockSpec`` index-map lambda must take
+  ``grid_rank + num_scalar_prefetch`` arguments (scalar-prefetch refs are
+  appended to the grid indices by ``PrefetchScalarGridSpec``).
+* **kernel signature** — the kernel's positional parameter count must be
+  ``prefetch + len(in_specs) + n_out + len(scratch_shapes)``; a silent
+  off-by-one here binds a scratch ref to an output slot.
+* **grid divisibility** — a ``X // D`` feeding the grid needs a matching
+  ``% D`` in the same function (the pad-to-multiple idiom ``(-s) % D`` or
+  an assert); otherwise ragged tails are silently dropped.
+* **accumulator init** — a ``*_ref`` that is both read and written via
+  subscript (carried across sequential grid steps in VMEM scratch) must
+  be stored somewhere under a ``@pl.when(<idx> == 0)`` guard, or step 0
+  reads garbage from the previous grid cell's leftovers.
+* **tile alignment** — literal block-shape trailing dims that are >= 8
+  but not lane/sublane aligned (last % 128, second-minor % 8).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from tools.splint.engine import Finding, call_name, dotted, parent_of
+
+RULE = "pallas-block"
+
+_PALLAS_CALL = {"pl.pallas_call", "pallas_call"}
+_PARTIAL = {"functools.partial", "partial"}
+
+
+def _enclosing_function(node: ast.AST):
+    p = parent_of(node)
+    while p is not None and not isinstance(
+            p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        p = parent_of(p)
+    return p
+
+
+def _assignment_map(fn) -> Dict[str, ast.AST]:
+    """name -> last assigned value expr inside ``fn`` (tuple unpack of
+    matching arity handled element-wise)."""
+    out: Dict[str, ast.AST] = {}
+    if fn is None:
+        return out
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        if isinstance(tgt, ast.Name):
+            out[tgt.id] = node.value
+        elif (isinstance(tgt, ast.Tuple)
+              and isinstance(node.value, ast.Tuple)
+              and len(tgt.elts) == len(node.value.elts)):
+            for t, v in zip(tgt.elts, node.value.elts, strict=True):
+                if isinstance(t, ast.Name):
+                    out[t.id] = v
+    return out
+
+
+def _resolve(node: Optional[ast.AST], env: Dict[str, ast.AST],
+             depth: int = 4) -> Optional[ast.AST]:
+    while depth and isinstance(node, ast.Name) and node.id in env:
+        node = env[node.id]
+        depth -= 1
+    return node
+
+
+def _const_int(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _seq_elts(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _module_functions(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def _resolve_kernel(node: Optional[ast.AST], env: Dict[str, ast.AST],
+                    fns: Dict[str, ast.FunctionDef]):
+    node = _resolve(node, env)
+    if isinstance(node, ast.Call) and call_name(node) in _PARTIAL \
+            and node.args:
+        node = _resolve(node.args[0], env)
+    if isinstance(node, ast.Name):
+        return fns.get(node.id)
+    return None
+
+
+def _block_specs(node: Optional[ast.AST], env: Dict[str, ast.AST]
+                 ) -> Tuple[Optional[int], List[ast.Call]]:
+    """(count, BlockSpec call nodes) for an in_specs/out_specs value."""
+    node = _resolve(node, env)
+    elts = _seq_elts(node)
+    if elts is None:
+        if isinstance(node, ast.Call):
+            elts = [node]
+        else:
+            return None, []
+    specs = [e for e in elts
+             if isinstance(e, ast.Call)
+             and (call_name(e) or "").endswith("BlockSpec")]
+    return len(elts), specs
+
+
+def _check_floordiv_guards(grid_elts: List[ast.AST], env: Dict[str, ast.AST],
+                           fn, path: str, findings: List[Finding]) -> None:
+    if fn is None:
+        return
+    mods = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+            mods.add(ast.unparse(node.right))
+    exprs: List[ast.AST] = []
+    for e in grid_elts:
+        exprs.append(e)
+        r = _resolve(e, env)
+        if r is not e and r is not None:
+            exprs.append(r)
+    for expr in exprs:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, ast.FloorDiv):
+                divisor = ast.unparse(node.right)
+                if divisor not in mods:
+                    findings.append(Finding(
+                        RULE, path, node.lineno, node.col_offset,
+                        f"grid dimension `{ast.unparse(node)}` floor-divides "
+                        f"by `{divisor}` with no `% {divisor}` pad/assert in "
+                        f"scope; ragged tail elements are silently dropped"))
+
+
+def _check_tile_alignment(spec: ast.Call, env: Dict[str, ast.AST],
+                          path: str, findings: List[Finding]) -> None:
+    shape = _resolve(spec.args[0] if spec.args
+                     else _kwarg(spec, "block_shape"), env)
+    elts = _seq_elts(shape)
+    if not elts:
+        return
+    last = _const_int(_resolve(elts[-1], env))
+    if last is not None and last >= 8 and last % 128 != 0:
+        findings.append(Finding(
+            RULE, path, spec.lineno, spec.col_offset,
+            f"block_shape last dim {last} is not lane-aligned "
+            f"(expected a multiple of 128)"))
+    if len(elts) >= 2:
+        second = _const_int(_resolve(elts[-2], env))
+        if second is not None and second >= 8 and second % 8 != 0:
+            findings.append(Finding(
+                RULE, path, spec.lineno, spec.col_offset,
+                f"block_shape second-minor dim {second} is not "
+                f"sublane-aligned (expected a multiple of 8)"))
+
+
+# -- accumulator-init analysis ----------------------------------------------
+
+
+def _is_when_zero_guard(fn: ast.FunctionDef) -> bool:
+    """True for ``@pl.when(<expr> == 0)``-decorated defs."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call) \
+                and (call_name(dec) or "").endswith("when") and dec.args:
+            test = dec.args[0]
+            if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                    and isinstance(test.ops[0], ast.Eq):
+                for side in (test.left, test.comparators[0]):
+                    if isinstance(side, ast.Constant) and side.value == 0:
+                        return True
+    return False
+
+
+def _check_accumulator_init(kernel: ast.FunctionDef, path: str,
+                            findings: List[Finding]) -> None:
+    refs = {a.arg for a in (kernel.args.posonlyargs + kernel.args.args)
+            if a.arg.endswith("_ref")}
+    if not refs:
+        return
+    reads, writes, guarded_writes = set(), set(), set()
+    for node in ast.walk(kernel):
+        if not (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in refs):
+            continue
+        name = node.value.id
+        if isinstance(node.ctx, ast.Load):
+            reads.add(name)
+        else:                       # Store / AugStore target
+            writes.add(name)
+            if isinstance(parent_of(node), ast.AugAssign):
+                reads.add(name)     # += reads the previous grid step's value
+            p = parent_of(node)
+            while p is not kernel and p is not None:
+                if isinstance(p, ast.FunctionDef) and _is_when_zero_guard(p):
+                    guarded_writes.add(name)
+                    break
+                p = parent_of(p)
+    for name in sorted((reads & writes) - guarded_writes):
+        findings.append(Finding(
+            RULE, path, kernel.lineno, kernel.col_offset,
+            f"ref `{name}` in kernel `{kernel.name}` is carried across grid "
+            f"steps (read and written) but never initialized under a "
+            f"`pl.when(<idx> == 0)` guard; step 0 reads stale VMEM"))
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    fns = _module_functions(tree)
+    checked_kernels = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) in _PALLAS_CALL):
+            continue
+        fn = _enclosing_function(node)
+        env = _assignment_map(fn)
+
+        grid_v = _kwarg(node, "grid")
+        in_specs_v = _kwarg(node, "in_specs")
+        out_specs_v = _kwarg(node, "out_specs")
+        out_shape_v = _kwarg(node, "out_shape")
+        scratch_v = _kwarg(node, "scratch_shapes")
+        prefetch = 0
+
+        grid_spec = _resolve(_kwarg(node, "grid_spec"), env)
+        if isinstance(grid_spec, ast.Call):
+            grid_v = _kwarg(grid_spec, "grid") or grid_v
+            in_specs_v = _kwarg(grid_spec, "in_specs") or in_specs_v
+            out_specs_v = _kwarg(grid_spec, "out_specs") or out_specs_v
+            scratch_v = _kwarg(grid_spec, "scratch_shapes") or scratch_v
+            prefetch = _const_int(
+                _kwarg(grid_spec, "num_scalar_prefetch")) or 0
+
+        grid_elts = _seq_elts(_resolve(grid_v, env))
+        rank = len(grid_elts) if grid_elts is not None else None
+        if grid_elts:
+            _check_floordiv_guards(grid_elts, env, fn, path, findings)
+
+        n_in, in_specs = _block_specs(in_specs_v, env)
+        n_out_specs, out_specs = _block_specs(out_specs_v, env)
+        for spec in in_specs + out_specs:
+            _check_tile_alignment(spec, env, path, findings)
+            index_map = (spec.args[1] if len(spec.args) > 1
+                         else _kwarg(spec, "index_map"))
+            if rank is not None and isinstance(index_map, ast.Lambda):
+                arity = len(index_map.args.posonlyargs
+                            + index_map.args.args)
+                want = rank + prefetch
+                if arity != want:
+                    findings.append(Finding(
+                        RULE, path, index_map.lineno, index_map.col_offset,
+                        f"BlockSpec index map takes {arity} args but grid "
+                        f"rank {rank} + {prefetch} scalar-prefetch "
+                        f"requires {want}"))
+
+        n_out = None
+        out_shape = _resolve(out_shape_v, env)
+        shape_elts = _seq_elts(out_shape)
+        if shape_elts is not None:
+            n_out = len(shape_elts)
+        elif isinstance(out_shape, ast.Call):
+            n_out = 1
+        elif n_out_specs is not None:
+            n_out = n_out_specs
+
+        n_scratch = 0
+        scratch_elts = _seq_elts(_resolve(scratch_v, env))
+        if scratch_elts is not None:
+            n_scratch = len(scratch_elts)
+        elif scratch_v is not None:
+            n_scratch = None        # present but unresolvable
+
+        kernel = _resolve_kernel(node.args[0] if node.args else None,
+                                 env, fns)
+        if kernel is not None and None not in (n_in, n_out, n_scratch):
+            n_params = len(kernel.args.posonlyargs + kernel.args.args)
+            want = prefetch + n_in + n_out + n_scratch
+            if n_params != want:
+                findings.append(Finding(
+                    RULE, path, node.lineno, node.col_offset,
+                    f"kernel `{kernel.name}` takes {n_params} positional "
+                    f"refs but pallas_call provides {want} "
+                    f"({prefetch} prefetch + {n_in} in + {n_out} out + "
+                    f"{n_scratch} scratch)"))
+        if kernel is not None and kernel.name not in checked_kernels:
+            checked_kernels.add(kernel.name)
+            _check_accumulator_init(kernel, path, findings)
+    return findings

@@ -1,0 +1,171 @@
+"""prng-reuse rule: jax.random keys consumed more than once or in loops.
+
+A ``jax.random`` consumer (``normal``, ``uniform``, ``bernoulli``, ...)
+must see each key exactly once; reusing one silently correlates samples
+(fleet channel draws that should be i.i.d. come out identical).
+
+Flagged, per function scope:
+
+* the *same key expression* (textually, e.g. ``rng`` or
+  ``jax.random.PRNGKey(0)``) passed to two or more consumer calls —
+  ``keys[0]`` / ``keys[1]`` after a ``split`` are distinct and fine;
+* a consumer inside a ``for``/``while`` whose key expression involves no
+  loop-varying name (not the loop target, never reassigned in the body):
+  every iteration draws from the same stream.  Re-splitting
+  (``key, sub = jax.random.split(key)``) or indexing by the loop
+  variable both count as varying.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.splint.engine import Finding, call_name, parent_of
+
+RULE = "prng-reuse"
+
+_NONCONSUMERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "key_impl", "clone"}
+
+
+def _random_roots(tree: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(module roots like ``jax.random.``, bare consumer names) resolved
+    from the file's imports — ``import random`` (stdlib) never matches."""
+    roots = {"jax.random."}
+    bare: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.random" and a.asname:
+                    roots.add(a.asname + ".")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "random":
+                        roots.add((a.asname or a.name) + ".")
+            elif node.module == "jax.random":
+                for a in node.names:
+                    if a.name not in _NONCONSUMERS:
+                        bare.add(a.asname or a.name)
+    return roots, bare
+
+
+def _consumer_name(node: ast.Call, roots: Set[str],
+                   bare: Set[str]) -> Optional[str]:
+    name = call_name(node)
+    if not name:
+        return None
+    if name in bare:
+        return name
+    for root in roots:
+        if name.startswith(root):
+            tail = name[len(root):]
+            if "." not in tail and tail not in _NONCONSUMERS:
+                return name
+    return None
+
+
+def _key_expr(node: ast.Call) -> Optional[ast.AST]:
+    if node.args:
+        return node.args[0]
+    for kw in node.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+def _names_in(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _enclosing_fn(node: ast.AST):
+    p = parent_of(node)
+    while p is not None and not isinstance(
+            p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        p = parent_of(p)
+    return p
+
+
+def _enclosing_loop(node: ast.AST, stop_at) -> Optional[ast.AST]:
+    p = parent_of(node)
+    while p is not None and p is not stop_at:
+        if isinstance(p, (ast.For, ast.While)):
+            return p
+        p = parent_of(p)
+    return None
+
+
+def _branch_chain(node: ast.AST, stop_at) -> Dict[int, str]:
+    """{id(If): arm} for every enclosing ``if``; two consumers sharing an
+    If on different arms are mutually exclusive, not reuse."""
+    chain: Dict[int, str] = {}
+    cur, p = node, parent_of(node)
+    while p is not None and p is not stop_at:
+        if isinstance(p, ast.If):
+            if cur in p.body:
+                chain[id(p)] = "body"
+            elif cur in p.orelse:
+                chain[id(p)] = "orelse"
+        cur, p = p, parent_of(p)
+    return chain
+
+
+def _exclusive(a: Dict[int, str], b: Dict[int, str]) -> bool:
+    return any(a[k] != b[k] for k in a.keys() & b.keys())
+
+
+def _loop_varying_names(loop: ast.AST) -> Set[str]:
+    varying: Set[str] = set()
+    if isinstance(loop, ast.For):
+        varying.update(_names_in(loop.target))
+    for stmt in loop.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                varying.add(node.id)
+    return varying
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    roots, bare = _random_roots(tree)
+    # consumers grouped by nearest enclosing function (None = module level)
+    by_scope: Dict[Optional[ast.AST],
+                   List[Tuple[ast.Call, str, ast.AST]]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        cname = _consumer_name(node, roots, bare)
+        if cname is None:
+            continue
+        key = _key_expr(node)
+        if key is None or (isinstance(key, ast.Constant)
+                           and not isinstance(key.value, str)):
+            continue
+        by_scope.setdefault(_enclosing_fn(node), []).append(
+            (node, cname, key))
+
+    for scope, consumers in by_scope.items():
+        consumers.sort(key=lambda t: (t[0].lineno, t[0].col_offset))
+        seen: Dict[str, List[ast.Call]] = {}
+        for node, cname, key in consumers:
+            sig = ast.unparse(key)
+            chain = _branch_chain(node, scope)
+            prior = [n for n in seen.get(sig, ())
+                     if not _exclusive(chain, _branch_chain(n, scope))]
+            if prior:
+                findings.append(Finding(
+                    RULE, path, node.lineno, node.col_offset,
+                    f"key `{sig}` already consumed at line "
+                    f"{prior[0].lineno}; split it (`jax.random.split`) "
+                    f"instead of reusing"))
+            seen.setdefault(sig, []).append(node)
+            loop = _enclosing_loop(node, scope)
+            if loop is not None:
+                varying = _loop_varying_names(loop)
+                if not (_names_in(key) & varying):
+                    findings.append(Finding(
+                        RULE, path, node.lineno, node.col_offset,
+                        f"`{cname}` consumes key `{sig}` every loop "
+                        f"iteration without re-splitting; samples are "
+                        f"identical across iterations"))
+    return findings

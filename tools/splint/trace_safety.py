@@ -1,0 +1,283 @@
+"""trace-safety rule: host syncs and Python control flow on traced values.
+
+Two sub-analyses share the rule id:
+
+**(a) taint inside jit/vmap/shard_map-decorated functions.**  Parameters
+(minus ``static_argnames``/``static_argnums``) are traced; taint
+propagates through assignments.  Flagged on tainted values: Python
+``if``/``while``/``assert`` tests and ``for`` iterators (tracer leaks
+into Python control flow -> ConcretizationTypeError or silent
+specialization), ``float()``/``int()``/``bool()`` casts, ``.item()``/
+``.tolist()``, and ``np.*`` calls (host round-trip under trace).
+Accesses through ``.shape``/``.ndim``/``.dtype``/``.size`` are static
+under tracing and never count.
+
+**(b) per-iteration host syncs in hot loops** (any function, jitted or
+not): ``.item()``/``.tolist()``, ``jax.block_until_ready``/
+``jax.device_get`` inside a ``for``/``while`` body, and ``float()``/
+``int()``/``np.asarray()``/``np.array()`` of a name freshly produced by a
+call in the same loop body — the "silently sync every iteration" pattern
+that serializes a fleet sweep.  Timing harnesses that sync on purpose
+carry a ``# splint: ignore[trace-safety]`` pragma.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set, Tuple
+
+from tools.splint.engine import (Finding, call_name, const_int_tuple,
+                                 const_str_tuple, dotted, parent_of)
+
+RULE = "trace-safety"
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap", "pmap",
+              "shard_map", "jax.experimental.shard_map.shard_map",
+              "jax.shard_map"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_SYNC_METHODS = {"item", "tolist"}
+_HOST_CASTS = {"float", "int", "bool"}
+_NP_ROOTS = ("np.", "numpy.")
+_LOOP_SYNC_CALLS = {"jax.block_until_ready", "jax.device_get"}
+
+
+def jit_static_names(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """If ``fn`` is jit/vmap/shard_map-decorated, the set of static param
+    names; None if it is not jitted."""
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for dec in fn.decorator_list:
+        name = dotted(dec)
+        if name in _JIT_NAMES:
+            return set()
+        if isinstance(dec, ast.Call):
+            fname = call_name(dec)
+            target_kw = None
+            if fname in _JIT_NAMES:
+                target_kw = dec.keywords
+            elif (fname in _PARTIAL_NAMES and dec.args
+                  and dotted(dec.args[0]) in _JIT_NAMES):
+                target_kw = dec.keywords
+            if target_kw is not None:
+                static: Set[str] = set()
+                for kw in target_kw:
+                    if kw.arg == "static_argnames":
+                        static.update(const_str_tuple(kw.value) or ())
+                    elif kw.arg == "static_argnums":
+                        for i in const_int_tuple(kw.value) or ():
+                            if 0 <= i < len(params):
+                                static.add(params[i])
+                return static
+    return None
+
+
+def _tainted_value_names(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted names used *as values* in expr — occurrences reached only
+    through static attributes (.shape/.ndim/...) don't count."""
+    hits: Set[str] = set()
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and node.id in tainted):
+            continue
+        p, cur = parent_of(node), node
+        static_access = False
+        while p is not None:
+            if isinstance(p, ast.Attribute) and p.value is cur \
+                    and p.attr in _STATIC_ATTRS:
+                static_access = True
+                break
+            if isinstance(p, ast.Call) and p.func is cur:
+                static_access = True       # calling a tainted callable: skip
+                break
+            if p is expr:
+                break
+            cur, p = p, parent_of(p)
+        if not static_access:
+            hits.add(node.id)
+    return hits
+
+
+def _assign_targets(node: ast.AST) -> List[str]:
+    out: List[str] = []
+    for t in ast.walk(node):
+        if isinstance(t, ast.Name) and isinstance(t.ctx, ast.Store):
+            out.append(t.id)
+    return out
+
+
+class _JittedBodyVisitor(ast.NodeVisitor):
+    """Taint pass over one jitted function body."""
+
+    def __init__(self, fn_name: str, tainted: Set[str], path: str,
+                 findings: List[Finding]):
+        self.fn = fn_name
+        self.tainted = tainted
+        self.path = path
+        self.findings = findings
+
+    def _flag(self, node, msg):
+        self.findings.append(Finding(RULE, self.path, node.lineno,
+                                     node.col_offset, msg))
+
+    def _hits(self, expr) -> Set[str]:
+        return _tainted_value_names(expr, self.tainted)
+
+    # -- propagation ---------------------------------------------------------
+    def visit_Assign(self, node):
+        if self._hits(node.value):
+            self.tainted.update(_assign_targets(node))
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node):
+        if node.value is not None and self._hits(node.value):
+            self.tainted.update(_assign_targets(node.target))
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if self._hits(node.value):
+            self.tainted.update(_assign_targets(node.target))
+        self.generic_visit(node)
+
+    # -- control flow on traced values ---------------------------------------
+    def visit_If(self, node):
+        hits = self._hits(node.test)
+        if hits:
+            self._flag(node, f"Python `if` on traced value(s) "
+                             f"{sorted(hits)} inside jitted `{self.fn}`; "
+                             f"use jnp.where or lax.cond")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        hits = self._hits(node.test)
+        if hits:
+            self._flag(node, f"Python `while` on traced value(s) "
+                             f"{sorted(hits)} inside jitted `{self.fn}`; "
+                             f"use lax.while_loop")
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        hits = self._hits(node.iter)
+        if hits:
+            self._flag(node, f"Python loop over traced value(s) "
+                             f"{sorted(hits)} inside jitted `{self.fn}`; "
+                             f"use lax.scan or lax.fori_loop")
+        else:
+            self.tainted.update(_assign_targets(node.target))
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):
+        hits = self._hits(node.test)
+        if hits:
+            self._flag(node, f"assert on traced value(s) {sorted(hits)} "
+                             f"inside jitted `{self.fn}`; use "
+                             f"checkify or a host-side validation")
+        self.generic_visit(node)
+
+    # -- host syncs ----------------------------------------------------------
+    def visit_Call(self, node):
+        name = call_name(node)
+        if name in _HOST_CASTS and node.args \
+                and self._hits(node.args[0]):
+            self._flag(node, f"`{name}()` on traced value inside jitted "
+                             f"`{self.fn}` forces a host sync "
+                             f"(ConcretizationTypeError under jit)")
+        elif name and name.startswith(_NP_ROOTS) and any(
+                self._hits(a) for a in node.args):
+            self._flag(node, f"`{name}` on traced value inside jitted "
+                             f"`{self.fn}`; use the jnp equivalent")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS \
+                and self._hits(node.func.value):
+            self._flag(node, f"`.{node.func.attr}()` on traced value inside "
+                             f"jitted `{self.fn}` forces a host sync")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        # nested defs (pl.when closures etc.) trace with the outer scope
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# (b) per-iteration host syncs in loops
+# ---------------------------------------------------------------------------
+
+
+def _call_assigned_names(loop_body: Sequence[ast.stmt]) -> Set[str]:
+    """Names assigned from a call result anywhere inside the loop body."""
+    out: Set[str] = set()
+    for stmt in loop_body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                out.update(_assign_targets(node))
+    return out
+
+
+def _check_loops(tree: ast.AST, path: str, jitted: Set[ast.AST]
+                 ) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        # loops *inside* jitted functions are covered by the taint pass
+        p = parent_of(node)
+        in_jitted = False
+        while p is not None:
+            if p in jitted:
+                in_jitted = True
+                break
+            p = parent_of(p)
+        if in_jitted:
+            continue
+        fresh = _call_assigned_names(node.body)
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = call_name(sub)
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in _SYNC_METHODS:
+                findings.append(Finding(
+                    RULE, path, sub.lineno, sub.col_offset,
+                    f"`.{sub.func.attr}()` inside a loop syncs the device "
+                    f"every iteration; hoist or batch"))
+            elif name in _LOOP_SYNC_CALLS:
+                findings.append(Finding(
+                    RULE, path, sub.lineno, sub.col_offset,
+                    f"`{name}` inside a loop syncs every iteration; hoist "
+                    f"out of the loop (or pragma if the sync is the point)"))
+            elif name in {"float", "int"} and len(sub.args) == 1 \
+                    and isinstance(sub.args[0], ast.Name) \
+                    and sub.args[0].id in fresh:
+                findings.append(Finding(
+                    RULE, path, sub.lineno, sub.col_offset,
+                    f"`{name}({sub.args[0].id})` syncs on a freshly computed "
+                    f"device value every loop iteration; hoist the "
+                    f"conversion out of the loop"))
+            elif name in {"np.asarray", "np.array", "numpy.asarray",
+                          "numpy.array"} and sub.args \
+                    and isinstance(sub.args[0], ast.Name) \
+                    and sub.args[0].id in fresh:
+                findings.append(Finding(
+                    RULE, path, sub.lineno, sub.col_offset,
+                    f"`{name}({sub.args[0].id})` transfers a freshly "
+                    f"computed device value every loop iteration; batch "
+                    f"the transfer after the loop"))
+    return findings
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    jitted: Set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        static = jit_static_names(node)
+        if static is None:
+            continue
+        jitted.add(node)
+        params = [a.arg for a in (node.args.posonlyargs + node.args.args
+                                  + node.args.kwonlyargs)]
+        tainted = {p for p in params if p not in static} - {"self", "cls"}
+        visitor = _JittedBodyVisitor(node.name, tainted, path, findings)
+        for stmt in node.body:
+            visitor.visit(stmt)
+    findings.extend(_check_loops(tree, path, jitted))
+    return findings

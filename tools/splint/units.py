@@ -1,0 +1,179 @@
+"""unit-suffix rule: the repo's unit-suffix registry + the AST detector.
+
+The cost model's numbers only mean anything if ``_s`` seconds never get
+added to ``_joules`` or ``_bytes`` (Eqs. 9-12 mix all three families one
+step apart).  The registry below is the single source of truth for what a
+trailing ``_<token>`` means; it is also imported by
+``benchmarks/check_regression.py`` to validate BENCH_*.json payload keys.
+
+Dimension strings are deliberately scale-aware: ``_s`` and ``_us`` map to
+*different* dimensions (``time[s]`` vs ``time[us]``) — adding seconds to
+microseconds is exactly the class of bug this rule exists for.  Rates are
+composed: ``flops_per_s`` has dimension ``compute/time[s]``.
+
+Detected: ``+``/``-`` and comparisons where *both* operands are names (or
+attributes/subscripts of names) whose suffixes resolve to different
+dimensions.  Multiplication/division are unit-producing, not unit-mixing,
+and are left alone.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence
+
+from tools.splint.engine import Finding
+
+RULE = "unit-suffix"
+
+#: suffix token -> dimension. Scale variants are distinct dimensions on
+#: purpose (mixing them is a bug even though they "measure the same thing").
+UNIT_SUFFIXES: Dict[str, str] = {
+    "s": "time[s]",
+    "ms": "time[ms]",
+    "us": "time[us]",
+    "ns": "time[ns]",
+    "joules": "energy[J]",
+    "j": "energy[J]",
+    "flops": "compute[flop]",
+    "flop": "compute[flop]",
+    "bytes": "data[byte]",
+    "bits": "data[bit]",
+    "hz": "frequency[Hz]",
+    "ghz": "frequency[GHz]",
+    "w": "power[W]",
+    "watts": "power[W]",
+    "db": "level[dB]",
+    "dbm": "power[dBm]",
+    "m": "length[m]",
+}
+
+#: near-miss spellings that should be normalized, never introduced
+ALIAS_SUFFIXES: Dict[str, str] = {
+    "sec": "s", "secs": "s", "second": "s", "seconds": "s",
+    "msec": "ms", "msecs": "ms", "usec": "us", "micros": "us",
+    "joule": "joules", "joul": "joules",
+    "byte": "bytes", "bit": "bits",
+    "hertz": "hz", "watt": "w",
+    "millis": "ms", "nanos": "ns",
+}
+
+#: bare names (no underscore) that still carry a unit; single letters like
+#: ``s``/``m``/``w`` are far too overloaded to count
+_BARE_UNIT_NAMES = {"flops", "bytes", "bits", "joules", "seconds", "watts"}
+
+
+def dimension_of(name: str) -> Optional[str]:
+    """Dimension of a variable/attribute name, or None if unsuffixed.
+
+    ``layer_s`` -> ``time[s]``; ``flops_per_s`` -> ``compute[flop]/time[s]``;
+    ``d_model`` -> None. Trailing underscores (``bytes_``) are stripped.
+    """
+    name = name.rstrip("_")
+    toks = name.split("_")
+    if len(toks) >= 3 and toks[-2] == "per":
+        num = UNIT_SUFFIXES.get(toks[-3])
+        den = UNIT_SUFFIXES.get(toks[-1])
+        if num and den:
+            return f"{num}/{den}"
+        if den:                      # e.g. decisions_per_s -> rate over time
+            return f"count/{den}"
+        return None
+    if len(toks) >= 2:
+        return UNIT_SUFFIXES.get(toks[-1])
+    # bare name: only unambiguous multi-char unit words count
+    if name in _BARE_UNIT_NAMES:
+        return UNIT_SUFFIXES.get(name, UNIT_SUFFIXES.get(name.rstrip("s")))
+    return None
+
+
+def _expr_name_and_dim(node: ast.AST):
+    """(display-name, dimension) for Name/Attribute/Subscript chains."""
+    if isinstance(node, ast.Name):
+        return node.id, dimension_of(node.id)
+    if isinstance(node, ast.Attribute):
+        return node.attr, dimension_of(node.attr)
+    if isinstance(node, ast.Subscript):
+        return _expr_name_and_dim(node.value)
+    return None, None
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node, a, da, b, db):
+        findings.append(Finding(
+            RULE, path, node.lineno, node.col_offset,
+            f"unit mismatch: `{a}` [{da}] combined with `{b}` [{db}]"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                      (ast.Add, ast.Sub)):
+            a, da = _expr_name_and_dim(node.left)
+            b, db = _expr_name_and_dim(node.right)
+            if da and db and da != db:
+                flag(node, a, da, b, db)
+        elif isinstance(node, ast.Compare):
+            operands = [node.left] + list(node.comparators)
+            # adjacent operand pairs — deliberately unequal lengths
+            for lhs, rhs in zip(operands, operands[1:], strict=False):
+                a, da = _expr_name_and_dim(lhs)
+                b, db = _expr_name_and_dim(rhs)
+                if da and db and da != db:
+                    flag(node, a, da, b, db)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Payload-key validation (imported by benchmarks/check_regression.py)
+# ---------------------------------------------------------------------------
+
+
+def key_dimensions(key: str) -> List[str]:
+    """All unit dimensions a snake_case payload key mentions, with
+    ``a_per_b`` rate groups collapsed to one dimension."""
+    toks = key.rstrip("_").split("_")
+    dims: List[str] = []
+    i = 0
+    while i < len(toks):
+        if (i + 2 < len(toks) and toks[i + 1] == "per"
+                and toks[i] in UNIT_SUFFIXES and toks[i + 2] in UNIT_SUFFIXES):
+            dims.append(f"{UNIT_SUFFIXES[toks[i]]}/{UNIT_SUFFIXES[toks[i + 2]]}")
+            i += 3
+        elif toks[i] in UNIT_SUFFIXES:
+            dims.append(UNIT_SUFFIXES[toks[i]])
+            i += 1
+        else:
+            i += 1
+    return dims
+
+
+def check_key_units(keys: Sequence[str], *, context: str = "payload",
+                    require: Optional[str] = None) -> List[str]:
+    """Errors for payload keys with alias or inconsistent unit suffixes.
+
+    ``require`` (a dimension string, e.g. ``"time[s]"``) additionally
+    demands every key mention that dimension — the gates dict is wall
+    seconds by contract, so a gate key without ``_s`` is a schema bug.
+    """
+    errors: List[str] = []
+    for key in keys:
+        toks = key.rstrip("_").split("_")
+        for tok in toks:
+            if tok in ALIAS_SUFFIXES:
+                errors.append(
+                    f"{context}: key {key!r} uses nonstandard unit token "
+                    f"'{tok}' (use '{ALIAS_SUFFIXES[tok]}')")
+        dims = key_dimensions(key)
+        plain = [d for d in dims if "/" not in d]
+        if len(set(plain)) > 1:
+            errors.append(f"{context}: key {key!r} mixes unit suffixes "
+                          f"{sorted(set(plain))}")
+        if require and not dims:
+            errors.append(f"{context}: key {key!r} carries no unit suffix "
+                          f"(expected {require})")
+        elif require and dims and require not in dims \
+                and not any(d.startswith(require) or f"/{require}" in d
+                            for d in dims):
+            errors.append(f"{context}: key {key!r} has units {dims}, "
+                          f"expected {require}")
+    return errors
