@@ -30,7 +30,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from tools.splint.units import check_key_units  # noqa: E402
 
 BENCH_FILES = ("BENCH_kernels.json", "BENCH_card_calibration.json",
-               "BENCH_fleet_scale.json")
+               "BENCH_fleet_scale.json", "BENCH_churn.json")
 
 # required top-level keys per schema tag; every payload must carry
 # "schema", "mode", and a (possibly empty) "gates" dict of positive floats
@@ -38,6 +38,7 @@ REQUIRED_KEYS: Dict[str, Tuple[str, ...]] = {
     "bench-kernels/v1": ("probes", "roofline_fit", "latency_tables"),
     "bench-card-calibration/v1": ("dryrun_status", "dryrun_rows", "measured"),
     "bench-fleet-scale/v1": ("scaling", "big_fleet"),
+    "bench-churn/v1": ("sweep", "devices", "quorum"),
 }
 
 
@@ -81,6 +82,14 @@ def validate(path: str) -> List[str]:
         if not payload["measured"].get("rows"):
             errors.append(f"{path}: measured.rows is empty — the "
                           "no-dryrun fallback must still calibrate")
+    if schema == "bench-churn/v1" and not errors:
+        if not payload["sweep"]:
+            errors.append(f"{path}: sweep is empty")
+        for row in payload["sweep"]:
+            frac = row.get("survivor_fraction")
+            if not isinstance(frac, (int, float)) or not 0.0 <= frac <= 1.0:
+                errors.append(f"{path}: survivor_fraction {frac!r} "
+                              "not in [0, 1]")
     return errors
 
 

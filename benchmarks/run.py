@@ -53,6 +53,13 @@ def smoke() -> None:
     rows.append(("fleet_scale_smoke", us,
                  f"speedup={fleet['speedup_at_largest']:.1f};"
                  f"big_dec_per_s={fleet['big_fleet']['decisions_per_s']:.0f}"))
+    from benchmarks import churn_bench
+    us, churn = _timed(lambda: churn_bench.run(
+        devices=50, rounds=2, dropout_rates=(0.0, 0.2)))
+    worst = churn["sweep"][-1]
+    rows.append(("churn_smoke", us,
+                 f"survivors={worst['survivor_fraction']:.2f};"
+                 f"quorum_rate={worst['quorum_rate']:.2f}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -91,6 +98,15 @@ def main() -> None:
                  f"speedup_100dev={fleet['speedup_at_largest']:.0f}x;"
                  f"1000dev_dec_per_s={b['decisions_per_s']:.0f};"
                  f"parallel_speedup={b['parallel_speedup']:.1f}"))
+
+    # --- churn tolerance (dropout sweep under partial aggregation) -----------
+    from benchmarks import churn_bench
+    us, churn = _timed(lambda: churn_bench.run())
+    worst = churn["sweep"][-1]
+    rows.append(("churn_sweep", us,
+                 f"dropout={worst['dropout_rate']};"
+                 f"survivors={worst['survivor_fraction']:.2f};"
+                 f"rounds_per_commit={worst['rounds_per_commit']:.2f}"))
 
     # --- CARD runtime (Alg. 1 is O(I)) ---------------------------------------
     from repro.configs.base import get_config

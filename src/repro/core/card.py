@@ -32,6 +32,45 @@ class Decision:
     energy: float
 
 
+class DeadlineSpec(NamedTuple):
+    """Straggler-aware deadline objective (churn extension, cf. Efficient
+    Split Federated Learning, arXiv:2504.14667).
+
+    The server closes rounds at a deadline; a decision whose nominal delay
+    already exceeds it misses with probability 1, one that only misses when
+    the device straggles (delay * mean slowdown > deadline) misses with the
+    straggler probability, and every decision additionally risks the
+    device's dropout. CARD's scalarized cost (Eq. 12) gains
+    ``penalty * P(miss)`` so the (cut, f) choice trades delay/energy against
+    the round actually committing. All fields are plain floats (jit data).
+    """
+    deadline_s: float
+    p_dropout: float = 0.0
+    p_straggler: float = 0.0
+    slowdown: float = 1.0      # E[slowdown | straggler event]
+    penalty: float = 1.0
+
+
+def miss_probability(delay, spec: DeadlineSpec):
+    """P(decision with nominal ``delay`` misses the round deadline) — jnp
+    broadcasting over arbitrarily shaped delay tensors."""
+    p_late = jnp.where(delay > spec.deadline_s, 1.0,
+                       jnp.where(delay * spec.slowdown > spec.deadline_s,
+                                 spec.p_straggler, 0.0))
+    return spec.p_dropout + (1.0 - spec.p_dropout) * p_late
+
+
+def _miss_probability_scalar(delay: float, spec: DeadlineSpec) -> float:
+    """Float64 twin of :func:`miss_probability` for the scalar oracle."""
+    if delay > spec.deadline_s:
+        p_late = 1.0
+    elif delay * spec.slowdown > spec.deadline_s:
+        p_late = spec.p_straggler
+    else:
+        p_late = 0.0
+    return spec.p_dropout + (1.0 - spec.p_dropout) * p_late
+
+
 def optimal_frequency(ctx: RoundContext) -> float:
     """Eq. (16). Note Q is independent of c — the frequency subproblem and
     the cut subproblem decouple exactly as the paper exploits."""
@@ -44,22 +83,37 @@ def optimal_frequency(ctx: RoundContext) -> float:
     return float(np.clip(q, ctx.f_min(), ctx.server.f_max))
 
 
-def _evaluate(ctx: RoundContext, cut: int, f: float, corners) -> Decision:
-    return Decision(cut=cut, frequency=f,
-                    cost=ctx.cost(cut, f, corners),
-                    delay=ctx.round_delay(cut, f),
+def _evaluate(ctx: RoundContext, cut: int, f: float, corners,
+              deadline: Optional[DeadlineSpec] = None) -> Decision:
+    delay = ctx.round_delay(cut, f)
+    cost = ctx.cost(cut, f, corners)
+    if deadline is not None:
+        cost += deadline.penalty * _miss_probability_scalar(delay, deadline)
+    return Decision(cut=cut, frequency=f, cost=cost, delay=delay,
                     energy=ctx.server_energy(cut, f))
 
 
-def card(ctx: RoundContext, *, respect_memory: bool = True) -> Decision:
-    """Alg. 1: f* once (line 1), then brute-force c (lines 3-9)."""
+def card(ctx: RoundContext, *, respect_memory: bool = True,
+         deadline: Optional[DeadlineSpec] = None) -> Decision:
+    """Alg. 1: f* once (line 1), then brute-force c (lines 3-9).
+
+    With ``deadline``, each candidate's cost is penalized by its round-miss
+    probability (straggler-aware deadline objective), and every cut gains a
+    *rescue* frequency candidate — the server flat out at ``f_max``, the
+    delay-minimal point Eq. (16) cannot reach because its closed form does
+    not see the deadline. The rescue wins only when its penalized cost is
+    strictly lower, so a slack deadline reproduces nominal CARD exactly."""
     corners = ctx.corners()
     f_star = optimal_frequency(ctx)
     max_cut = (ctx.max_feasible_cut() if respect_memory
                else ctx.workload.cfg.n_layers)
     best: Optional[Decision] = None
     for c in range(0, max_cut + 1):
-        cand = _evaluate(ctx, c, f_star, corners)
+        cand = _evaluate(ctx, c, f_star, corners, deadline)
+        if deadline is not None:
+            rescue = _evaluate(ctx, c, ctx.server.f_max, corners, deadline)
+            if rescue.cost < cand.cost:
+                cand = rescue
         if best is None or cand.cost < best.cost:
             best = cand
     assert best is not None
@@ -145,15 +199,21 @@ def batched_optimal_frequency(bctx: BatchedRoundContext,
 
 
 def _batched_evaluate(bctx: BatchedRoundContext, cuts: jnp.ndarray,
-                      f: jnp.ndarray, corners) -> BatchedDecision:
+                      f: jnp.ndarray, corners,
+                      deadline: Optional[DeadlineSpec] = None
+                      ) -> BatchedDecision:
     """Metrics for fixed per-(round, device) decisions (cuts, f): (R, D)."""
     c = cuts[..., None]
     parts = bctx.delay_components(c, f)
+    delays = parts.total[..., 0]
+    costs = bctx.cost(c, f, corners)[..., 0]
+    if deadline is not None:
+        costs = costs + deadline.penalty * miss_probability(delays, deadline)
     return BatchedDecision(
         cuts=cuts.astype(jnp.int32),
         freqs=jnp.broadcast_to(f, bctx.shape),
-        costs=bctx.cost(c, f, corners)[..., 0],
-        delays=parts.total[..., 0],
+        costs=costs,
+        delays=delays,
         energies=bctx.server_energy(c, f)[..., 0],
         d_device=parts.device_comp[..., 0], d_uplink=parts.uplink[..., 0],
         d_server=parts.server_comp[..., 0], d_downlink=parts.downlink[..., 0])
@@ -161,18 +221,40 @@ def _batched_evaluate(bctx: BatchedRoundContext, cuts: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("respect_memory",))
 def batched_card(bctx: BatchedRoundContext, *,
-                 respect_memory: bool = True) -> BatchedDecision:
+                 respect_memory: bool = True,
+                 deadline: Optional[DeadlineSpec] = None) -> BatchedDecision:
     """Alg. 1 for the whole fleet: closed-form f* per (round, device), then
-    the brute-force over cuts becomes one argmin over the cost tensor."""
+    the brute-force over cuts becomes one argmin over the cost tensor.
+    ``deadline`` adds the straggler-aware miss-probability penalty and the
+    per-cut f_max rescue candidate (same objective as the scalar path)."""
     corners = bctx.corners()
     f_star = batched_optimal_frequency(bctx, corners)
     grid = jnp.arange(bctx.n_cuts)
+    freqs = f_star
     cost = bctx.cost(grid, f_star, corners)                 # (R, D, C)
+    # structural None checks below: recompile only when the deadline
+    # objective is toggled on/off, never per value
+    # splint: ignore[trace-safety]
+    if deadline is not None:
+        def penalized(f):
+            base = bctx.cost(grid, f, corners)              # (R, D, C)
+            return base + deadline.penalty * miss_probability(
+                bctx.round_delay(grid, f), deadline)
+
+        cost = penalized(f_star)
+        rescue_cost = penalized(jnp.full(bctx.shape, bctx.server_f_max))
+        use_rescue = rescue_cost < cost                     # strict, like
+        cost = jnp.where(use_rescue, rescue_cost, cost)     # the scalar path
     if respect_memory:
         infeasible = grid[None, None, :] > bctx.max_cut[None, :, None]
         cost = jnp.where(infeasible, jnp.inf, cost)
     best = jnp.argmin(cost, axis=-1).astype(jnp.int32)      # (R, D)
-    return _batched_evaluate(bctx, best, f_star, corners)
+    # splint: ignore[trace-safety]
+    if deadline is not None:
+        picked = jnp.take_along_axis(use_rescue, best[..., None],
+                                     axis=-1)[..., 0]
+        freqs = jnp.where(picked, bctx.server_f_max, f_star)
+    return _batched_evaluate(bctx, best, freqs, corners, deadline)
 
 
 @partial(jax.jit, static_argnames=("n_freq", "respect_memory"))

@@ -29,8 +29,30 @@ from repro.core import card as card_lib
 from repro.core.channel import (SEED_STRIDE, WirelessChannel,
                                 draw_channel_matrix)
 from repro.core.cost_model import BatchedRoundContext, RoundContext, Workload
+from repro.core.faults import DeadlinePolicy, FaultModel, FaultRealization
 from repro.core.hardware import (DEFAULT_SIM, EDGE_FLEET, SERVER_RTX4060TI,
                                  DeviceProfile, SimParams)
+
+
+def _masked_mean(a: np.ndarray) -> float:
+    """Mean over non-NaN entries; NaN for an all-NaN (or empty) array.
+
+    Dropped devices are logged as NaN — a plain ``.mean()`` would silently
+    poison every Fig. 3/4 aggregate the moment one device misses a round.
+    """
+    a = np.asarray(a, np.float64)
+    mask = ~np.isnan(a)
+    if not mask.any():
+        return float("nan")
+    return float(a[mask].mean())
+
+
+def _masked_rowmax(a: np.ndarray) -> np.ndarray:
+    """Per-round max over non-NaN entries; NaN rows where nothing survived
+    (avoids numpy's all-NaN-slice RuntimeWarning from ``nanmax``)."""
+    filled = np.where(np.isnan(a), -np.inf, a)
+    out = filled.max(axis=1)
+    return np.where(np.isinf(out), np.nan, out)
 
 
 @dataclasses.dataclass
@@ -49,12 +71,23 @@ class FleetLog:
     d_uplink: Optional[np.ndarray] = None
     d_server: Optional[np.ndarray] = None
     d_downlink: Optional[np.ndarray] = None
+    # churn extension (apply_faults): True where the device's round result
+    # was committed; non-survivor delay/energy entries are NaN
+    participation: Optional[np.ndarray] = None   # bool (rounds, devices)
+    round_close_s: Optional[np.ndarray] = None   # (rounds,) server close time
+    fault_realization: Optional[FaultRealization] = None
 
     def mean_delay(self) -> float:
-        return float(self.delays.mean())
+        return _masked_mean(self.delays)
 
     def mean_energy(self) -> float:
-        return float(self.energies.mean())
+        return _masked_mean(self.energies)
+
+    def survivor_fraction(self) -> float:
+        """Fraction of (round, device) slots whose result was committed."""
+        if self.participation is None:
+            return 1.0
+        return float(self.participation.mean())
 
 
 def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
@@ -62,7 +95,8 @@ def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
                            devices: Sequence[DeviceProfile],
                            server: DeviceProfile, sim: SimParams, seed: int,
                            static_cut: Optional[int], respect_memory: bool,
-                           cost_source: str, latency_table) -> FleetLog:
+                           cost_source: str, latency_table,
+                           deadline_spec) -> FleetLog:
     """Reference oracle: the original triple loop, one decision at a time."""
     rng = np.random.default_rng(seed)
     channels = [WirelessChannel(channel_state, seed=seed + SEED_STRIDE * m,
@@ -86,7 +120,8 @@ def _simulate_fleet_scalar(cfg: ModelConfig, *, policy: str,
                                cost_source=cost_source,
                                latency_table=latency_table)
             if policy == "card":
-                d = card_lib.card(ctx, respect_memory=respect_memory)
+                d = card_lib.card(ctx, respect_memory=respect_memory,
+                                  deadline=deadline_spec)
             elif policy == "server_only":
                 d = card_lib.server_only(ctx)
             elif policy == "device_only":
@@ -118,7 +153,7 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                                server: DeviceProfile, sim: SimParams,
                                seed: int, static_cut: Optional[int],
                                respect_memory: bool, cost_source: str,
-                               latency_table) -> FleetLog:
+                               latency_table, deadline_spec) -> FleetLog:
     """All channel states up front, one jitted grid evaluation per policy."""
     nd = len(devices)
     batch = draw_channel_matrix(channel_state, rounds, nd, seed=seed,
@@ -131,7 +166,8 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                                      cost_source=cost_source,
                                      latency_table=latency_table)
     if policy == "card":
-        dec = card_lib.batched_card(bctx, respect_memory=respect_memory)
+        dec = card_lib.batched_card(bctx, respect_memory=respect_memory,
+                                    deadline=deadline_spec)
     elif policy == "server_only":
         dec = card_lib.batched_server_only(bctx)
     elif policy == "device_only":
@@ -161,6 +197,71 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                     d_downlink=np.asarray(host.d_downlink, np.float64))
 
 
+def apply_faults(log: FleetLog, realization: FaultRealization,
+                 deadline: Optional[DeadlinePolicy] = None) -> FleetLog:
+    """Overlay a fault realization on a decision log (both engines share
+    this, so fault handling can never make them drift).
+
+    Decisions stay as made — the server cannot know in advance who will
+    straggle — but what the fleet *experiences* changes: straggler factors
+    stretch the device-compute and radio delay components, outages add a
+    retransmission stall, and dropped-out / departed devices never report.
+    With a :class:`DeadlinePolicy`, the server closes each round at the
+    ``quantile`` of that round's *predicted* (nominal decision) delays over
+    its members; devices whose realized delay exceeds it are late and
+    dropped from the round (partial aggregation). Non-survivor delay/energy
+    entries become NaN — all ``FleetLog`` reductions are NaN-safe.
+    """
+    if realization.active.shape != log.delays.shape:
+        raise ValueError(f"realization shape {realization.active.shape} != "
+                         f"log shape {log.delays.shape}")
+    started = realization.participating           # active & not dropped out
+    # realized per-component delays (stall folded into the uplink term so
+    # components still sum to the realized total)
+    dev = log.d_device * realization.compute_slowdown
+    up = (log.d_uplink * realization.link_slowdown
+          + np.where(realization.outage, realization.outage_stall_s, 0.0))
+    down = log.d_downlink * realization.link_slowdown
+    # untouched entries keep the logged total verbatim (re-summing the
+    # components reorders float rounding) — the zero-fault degenerate case
+    # must be bit-identical to the fault-free log
+    untouched = ((realization.compute_slowdown == 1.0)
+                 & (realization.link_slowdown == 1.0) & ~realization.outage)
+    realized = np.where(untouched, log.delays,
+                        dev + up + log.d_server + down)
+
+    n_rounds = log.delays.shape[0]
+    deadline_s = np.full(n_rounds, np.inf)
+    if deadline is not None:
+        membered = realization.active.any(axis=1)
+        pred = np.where(realization.active, log.delays, np.nan)
+        if membered.any():
+            deadline_s[membered] = np.nanquantile(
+                pred[membered], deadline.quantile, axis=1)
+        late = started & (realized > deadline_s[:, None])
+    else:
+        late = np.zeros_like(started)
+    survivors = started & ~late
+
+    # server close time: the deadline if any member failed to report in
+    # time, else the last report; NaN when the round had no members at all
+    last_report = _masked_rowmax(np.where(survivors, realized, np.nan))
+    all_reported = (realization.active == survivors).all(axis=1)
+    close_s = np.where(all_reported, last_report,
+                       np.where(np.isinf(deadline_s), last_report,
+                                deadline_s))
+
+    def _mask(a):
+        return np.where(survivors, a, np.nan)
+
+    return dataclasses.replace(
+        log, delays=_mask(realized), energies=_mask(log.energies),
+        d_device=_mask(dev), d_uplink=_mask(up),
+        d_server=_mask(log.d_server), d_downlink=_mask(down),
+        participation=survivors, round_close_s=close_s,
+        fault_realization=realization)
+
+
 def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
                    channel_state: str = "normal", rounds: int = 50,
                    devices: Sequence[DeviceProfile] = EDGE_FLEET,
@@ -170,22 +271,45 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
                    respect_memory: bool = True,
                    engine: str = "vectorized",
                    cost_source: str = "analytic",
-                   latency_table=None) -> FleetLog:
+                   latency_table=None,
+                   fault_model: Optional[FaultModel] = None,
+                   deadline: Optional[DeadlinePolicy] = None) -> FleetLog:
     """Run ``rounds`` of per-device CARD (or baseline) decisions.
 
     ``cost_source="measured"`` routes per-cut compute delays through a
     kernel-calibrated ``measured_cost.LatencyTable`` instead of the paper's
     analytic FLOP counts; both engines honor it identically.
+
+    ``fault_model`` overlays dropout/straggler/outage/membership churn on
+    the log (see :func:`apply_faults`); ``fault_model=None`` is bit-exactly
+    today's fault-free simulation. ``deadline`` sets the round-closing
+    policy and, when ``objective_deadline_s`` is set, routes a
+    straggler-aware :class:`card.DeadlineSpec` into the CARD objective —
+    both engines consume the identical spec.
     """
+    deadline_spec = None
+    if deadline is not None and deadline.objective_deadline_s is not None:
+        deadline_spec = card_lib.DeadlineSpec(
+            deadline_s=float(deadline.objective_deadline_s),
+            p_dropout=fault_model.dropout_prob if fault_model else 0.0,
+            p_straggler=fault_model.straggler_prob if fault_model else 0.0,
+            slowdown=fault_model.mean_slowdown if fault_model else 1.0,
+            penalty=float(deadline.objective_penalty))
     kwargs = dict(policy=policy, channel_state=channel_state, rounds=rounds,
                   devices=devices, server=server, sim=sim, seed=seed,
                   static_cut=static_cut, respect_memory=respect_memory,
-                  cost_source=cost_source, latency_table=latency_table)
+                  cost_source=cost_source, latency_table=latency_table,
+                  deadline_spec=deadline_spec)
     if engine == "vectorized":
-        return _simulate_fleet_vectorized(cfg, **kwargs)
-    if engine == "scalar":
-        return _simulate_fleet_scalar(cfg, **kwargs)
-    raise ValueError(f"unknown engine {engine!r}")
+        log = _simulate_fleet_vectorized(cfg, **kwargs)
+    elif engine == "scalar":
+        log = _simulate_fleet_scalar(cfg, **kwargs)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    if fault_model is not None:
+        realization = fault_model.realize(rounds, len(devices), seed=seed)
+        log = apply_faults(log, realization, deadline)
+    return log
 
 
 def parallel_round_stats(log: FleetLog, server: DeviceProfile = SERVER_RTX4060TI,
@@ -206,20 +330,26 @@ def parallel_round_stats(log: FleetLog, server: DeviceProfile = SERVER_RTX4060TI
     pipelining credit); the legacy upper/lower bounds — which bracketed it
     when only the scalar total was logged — are kept for comparison.
     """
-    m = len(log.device_names)
-    t_seq = float(log.delays.sum(axis=1).mean())
+    # All reductions are masked: dropped (NaN) entries contribute nothing
+    # to sums, maxes, or means — a churned fleet reports exact round times
+    # over its survivors instead of NaN-poisoned aggregates.
+    valid = ~np.isnan(log.delays)                         # (R, D)
+    survivors = valid.sum(axis=1)                         # (R,)
+    t_seq = _masked_mean(np.where(
+        survivors > 0, np.where(valid, log.delays, 0.0).sum(axis=1), np.nan))
     # legacy bounds: server-side <= whole delay -> scale everything by M (ub);
     # perfect overlap of communication/device compute (lb)
-    t_par_ub = float(np.max(log.delays * m, axis=1).mean())
-    t_par_lb = float(np.max(log.delays, axis=1).mean())
+    t_par_ub = _masked_mean(_masked_rowmax(log.delays * survivors[:, None]))
+    t_par_lb = _masked_mean(_masked_rowmax(log.delays))
     out = {"sequential_s": t_seq, "parallel_upper_s": t_par_ub,
            "parallel_lower_s": t_par_lb,
            "speedup_lb": t_seq / t_par_ub if t_par_ub else float("nan"),
            "speedup_ub": t_seq / t_par_lb if t_par_lb else float("nan")}
     if log.d_server is not None:
-        per_dev = (log.d_device + log.d_uplink + m * log.d_server
-                   + log.d_downlink)
-        t_par = float(np.max(per_dev, axis=1).mean())
+        # the server splits its compute among that round's survivors only
+        per_dev = (log.d_device + log.d_uplink
+                   + survivors[:, None] * log.d_server + log.d_downlink)
+        t_par = _masked_mean(_masked_rowmax(per_dev))
         out["parallel_exact_s"] = t_par
         out["speedup_exact"] = t_seq / t_par if t_par else float("nan")
     return out

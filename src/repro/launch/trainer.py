@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig
+from repro.core.faults import ExchangeFailed, RetryPolicy, retry_call
 from repro.launch.train import make_train_step
 from repro.models import model as model_lib
 from repro.models.common import Params
@@ -37,6 +38,15 @@ class TrainerConfig:
     impl: str = "naive"
     remat: bool = False
     log_path: Optional[str] = None
+    # failure semantics: checkpoint/metrics I/O retries with capped backoff,
+    # and divergence detection at the (already synced) logging points
+    io_retries: int = 3
+    io_backoff_s: float = 0.05
+    max_nonfinite: int = 3     # consecutive non-finite losses before abort
+
+
+class TrainingDiverged(RuntimeError):
+    """Loss went non-finite for ``max_nonfinite`` consecutive log points."""
 
 
 class Trainer:
@@ -54,6 +64,9 @@ class Trainer:
         self.opt_state = self.optimizer.init(lora)
         self.step = 0
         self.metrics: List[Dict] = []
+        self._nonfinite_streak = 0
+        self._io_policy = RetryPolicy(max_attempts=max(1, tcfg.io_retries),
+                                      base_backoff_s=tcfg.io_backoff_s)
         self._train_step = jax.jit(make_train_step(
             cfg, self.optimizer, impl=tcfg.impl, remat=tcfg.remat,
             microbatches=tcfg.microbatches))
@@ -68,12 +81,21 @@ class Trainer:
         return os.path.join(d, "trainer.npz") if d else None
 
     def save(self) -> None:
+        """Checkpoint under I/O retries; a persistently failing filesystem
+        degrades to a logged warning instead of killing the run (the next
+        checkpoint interval tries again)."""
         path = self._ckpt_path()
         if not path:
             return
-        save_checkpoint(path, {"lora": self.lora,
-                               "opt_state": self.opt_state},
-                        step=self.step)
+        try:
+            retry_call(
+                lambda: save_checkpoint(path, {"lora": self.lora,
+                                               "opt_state": self.opt_state},
+                                        step=self.step),
+                self._io_policy, retry_on=(OSError,), sleep=time.sleep)
+        except ExchangeFailed as e:
+            self._log({"kind": "warning",
+                       "event": "checkpoint_failed", "error": str(e)})
 
     def restore(self) -> bool:
         path = self._ckpt_path()
@@ -95,8 +117,29 @@ class Trainer:
         rec["time"] = time.time()
         self.metrics.append(rec)
         if self.tcfg.log_path:
-            with open(self.tcfg.log_path, "a") as f:
-                f.write(json.dumps(rec) + "\n")
+            try:
+                retry_call(lambda: self._append_log_line(rec),
+                           self._io_policy, retry_on=(OSError,),
+                           sleep=time.sleep)
+            except ExchangeFailed:
+                # metrics stream is best-effort; in-memory copy is intact
+                rec["dropped_from_stream"] = True
+
+    def _append_log_line(self, rec: Dict) -> None:
+        with open(self.tcfg.log_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def _check_finite(self, loss: float) -> None:
+        if loss == loss and abs(loss) != float("inf"):
+            self._nonfinite_streak = 0
+            return
+        self._nonfinite_streak += 1
+        self._log({"kind": "warning", "event": "nonfinite_loss",
+                   "streak": self._nonfinite_streak})
+        if self._nonfinite_streak >= self.tcfg.max_nonfinite:
+            raise TrainingDiverged(
+                f"loss non-finite at {self._nonfinite_streak} consecutive "
+                f"log points (step {self.step})")
 
     def evaluate(self, eval_batches: List[Dict[str, Any]]) -> float:
         losses = [float(self._eval_loss(self.frozen, self.lora,
@@ -116,7 +159,9 @@ class Trainer:
             self.step += 1
             if self.step % 10 == 0 or self.step == 1:
                 # splint: ignore[trace-safety] -- 1-in-10 gated metrics sync
-                self._log({"kind": "train", "loss": float(loss)})
+                loss_val = float(loss)
+                self._log({"kind": "train", "loss": loss_val})
+                self._check_finite(loss_val)
             if eval_batches and t.eval_every \
                     and self.step % t.eval_every == 0:
                 self._log({"kind": "eval",

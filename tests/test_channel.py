@@ -57,3 +57,28 @@ def test_invalid_state_rejected():
 def test_rate_formula():
     st_ = ChannelState(snr_up_db=100.0, snr_down_db=100.0, bandwidth_hz=20e6)
     assert st_.rate_up == pytest.approx(20e6 * 5.5547)
+
+
+def test_determinism_seam_draw_rounds_vs_matrix():
+    """The seam both fleet engines (and the fault overlay) stand on:
+    per-device streams seeded ``seed + SEED_STRIDE * m`` yield bit-identical
+    realizations whether consumed one ``draw()`` at a time, in one
+    ``draw_rounds`` block, or through ``draw_channel_matrix``."""
+    from repro.core.channel import SEED_STRIDE, draw_channel_matrix
+    rounds, n_dev, seed = 7, 4, 13
+    batch = draw_channel_matrix("normal", rounds, n_dev, seed=seed)
+    for m in range(n_dev):
+        block = WirelessChannel("normal", seed=seed + SEED_STRIDE * m)
+        up, down = block.draw_rounds(rounds)
+        assert list(batch.snr_up_db[:, m]) == list(up)
+        assert list(batch.snr_down_db[:, m]) == list(down)
+        seq = WirelessChannel("normal", seed=seed + SEED_STRIDE * m)
+        for r in range(rounds):
+            # scalar draw() consumes the same stream; math.log10 vs np.log10
+            # differ in the last ulp, so approx here (exact above)
+            st_seq = seq.draw()
+            assert st_seq.snr_up_db == pytest.approx(up[r], rel=1e-12)
+            assert st_seq.snr_down_db == pytest.approx(down[r], rel=1e-12)
+            st_mat = batch.state(r, m)
+            assert st_mat.snr_up_db == batch.snr_up_db[r, m]
+            assert st_mat.rate_up == pytest.approx(st_seq.rate_up, rel=1e-9)

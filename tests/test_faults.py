@@ -1,0 +1,384 @@
+"""Churn tolerance: fault model determinism, the zero-fault identity, the
+deadline partial-aggregation seam, and the retry/circuit-breaker/quorum
+protocol hardening — all deterministic (injected faults, injected clocks).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import card as C
+from repro.core.channel import WirelessChannel
+from repro.core.faults import (CircuitBreaker, DeadlinePolicy, ExchangeFailed,
+                               FaultInjector, FaultModel, LinkTimeout,
+                               RetryPolicy, retry_call)
+from repro.core.hardware import (EDGE_FLEET, SERVER_RTX4060TI, SimParams,
+                                 make_heterogeneous_fleet)
+from repro.core.protocol import SplitFineTuner
+from repro.core.scheduler import parallel_round_stats, simulate_fleet
+from repro.data import make_fleet_datasets
+from repro.models import model as M
+from repro.optim import adamw, constant_schedule
+
+HEAVY = FaultModel(dropout_prob=0.2, straggler_prob=0.3, outage_prob=0.1,
+                   leave_prob=0.05)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel / FaultRealization
+# ---------------------------------------------------------------------------
+
+
+def test_realization_deterministic_and_prefix_stable():
+    a = HEAVY.realize(12, 6, seed=3)
+    b = HEAVY.realize(12, 6, seed=3)
+    for k in ("active", "dropout", "compute_slowdown", "link_slowdown",
+              "outage"):
+        assert np.array_equal(getattr(a, k), getattr(b, k)), k
+    # per-device streams: adding devices never perturbs existing ones
+    wide = HEAVY.realize(12, 9, seed=3)
+    assert np.array_equal(wide.dropout[:, :6], a.dropout)
+    assert np.array_equal(wide.compute_slowdown[:, :6], a.compute_slowdown)
+    # a different seed actually changes the draws
+    assert not np.array_equal(HEAVY.realize(12, 6, seed=4).dropout, a.dropout)
+
+
+def test_zero_probability_model_is_identity():
+    r = FaultModel().realize(8, 5, seed=0)
+    assert r.active.all() and not r.dropout.any() and not r.outage.any()
+    assert (r.compute_slowdown == 1.0).all()
+    assert (r.link_slowdown == 1.0).all()
+    assert r.participating.all()
+
+
+def test_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(dropout_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(slowdown_min=0.5)
+    with pytest.raises(ValueError):
+        DeadlinePolicy(quantile=0.0)
+
+
+def test_membership_markov_chain_rejoins():
+    fm = FaultModel(leave_prob=0.3, rejoin_prob=0.7)
+    r = fm.realize(200, 4, seed=1)
+    active = r.active
+    # devices leave AND come back (two-state chain mixes)
+    assert 0.0 < active.mean() < 1.0
+    left = (~active[1:] & active[:-1]).any()
+    rejoined = (active[1:] & ~active[:-1]).any()
+    assert left and rejoined
+
+
+# ---------------------------------------------------------------------------
+# simulate_fleet: the zero-fault identity and the fault overlay
+# ---------------------------------------------------------------------------
+
+
+def test_fault_free_log_bit_identical():
+    """fault_model=None and the zero-probability model produce the *same
+    bits* as today's simulation — the hardest acceptance criterion."""
+    cfg = get_config("llama32-1b")
+    base = simulate_fleet(cfg, rounds=6, seed=7)
+    degenerate = simulate_fleet(cfg, rounds=6, seed=7,
+                                fault_model=FaultModel(),
+                                deadline=DeadlinePolicy(quantile=1.0))
+    assert np.array_equal(base.delays, degenerate.delays)
+    assert np.array_equal(base.energies, degenerate.energies)
+    assert degenerate.participation.all()
+    assert degenerate.survivor_fraction() == 1.0
+
+
+def test_engines_decision_identical_under_faults():
+    cfg = get_config("llama32-1b")
+    kw = dict(rounds=5, seed=11, fault_model=HEAVY,
+              deadline=DeadlinePolicy(quantile=0.9, objective_deadline_s=5.0))
+    a = simulate_fleet(cfg, engine="scalar", **kw)
+    b = simulate_fleet(cfg, engine="vectorized", **kw)
+    assert np.array_equal(a.cuts, b.cuts)
+    np.testing.assert_allclose(a.freqs, b.freqs, rtol=1e-5)
+    assert np.array_equal(a.participation, b.participation)
+    np.testing.assert_allclose(a.delays, b.delays, rtol=1e-4)
+
+
+def test_deadline_objective_changes_decisions_toward_deadline():
+    """A tight deadline pushes CARD to faster configs: any (cut, f) meeting
+    it beats any that misses, so nominal delays shrink toward the deadline."""
+    cfg = get_config("llama32-1b")
+    base = simulate_fleet(cfg, rounds=8, seed=2)
+    deadline_s = float(np.quantile(base.delays, 0.25))
+    tight = simulate_fleet(
+        cfg, rounds=8, seed=2,
+        deadline=DeadlinePolicy(quantile=1.0,
+                                objective_deadline_s=deadline_s,
+                                objective_penalty=100.0))
+    changed = (tight.cuts != base.cuts) | ~np.isclose(tight.freqs, base.freqs)
+    assert changed.any()
+    assert tight.mean_delay() < base.mean_delay()
+    # the changed decisions never got *slower*
+    assert (tight.delays[changed] <= base.delays[changed] + 1e-9).all()
+
+
+def test_straggler_overlay_and_partial_aggregation():
+    cfg = get_config("llama32-1b")
+    fm = FaultModel(straggler_prob=0.4, slowdown_min=3.0, slowdown_max=5.0)
+    log = simulate_fleet(cfg, rounds=10, seed=5, fault_model=fm,
+                         deadline=DeadlinePolicy(quantile=0.8))
+    # some devices were late and dropped; survivors' stats stay finite
+    assert 0.0 < log.survivor_fraction() < 1.0
+    assert np.isfinite(log.mean_delay()) and np.isfinite(log.mean_energy())
+    assert np.isnan(log.delays[~log.participation]).all()
+    # the server closed every round no later than its worst survivor + stall
+    assert np.isfinite(log.round_close_s).all()
+    stats = parallel_round_stats(log)
+    for v in stats.values():
+        assert np.isfinite(v), stats
+
+
+def test_masked_reductions_ignore_nan():
+    cfg = get_config("llama32-1b")
+    log = simulate_fleet(cfg, rounds=4, seed=1)
+    clean_delay = log.mean_delay()
+    log.delays[0, 0] = np.nan
+    log.energies[0, 0] = np.nan
+    assert np.isfinite(log.mean_delay())
+    assert log.mean_delay() != clean_delay
+    assert np.isfinite(parallel_round_stats(log)["parallel_exact_s"])
+
+
+def test_thousand_device_churn_sweep_completes():
+    """Acceptance: 1000 heterogeneous devices at 20% dropout + stragglers
+    complete a sweep through deadline-based partial aggregation."""
+    cfg = get_config("llama32-1b")
+    fleet = make_heterogeneous_fleet(1000, seed=0)
+    fm = FaultModel(dropout_prob=0.2, straggler_prob=0.2)
+    log = simulate_fleet(cfg, rounds=3, seed=0, devices=fleet,
+                         fault_model=fm, deadline=DeadlinePolicy(quantile=0.9))
+    assert log.delays.shape == (3, 1000)
+    # ~20% dropout plus the late tail; well over half the fleet commits
+    assert 0.5 < log.survivor_fraction() < 0.9
+    assert np.isfinite(log.mean_delay())
+    assert np.isfinite(log.round_close_s).all()
+
+
+# ---------------------------------------------------------------------------
+# DeadlineSpec objective (scalar vs batched miss probability)
+# ---------------------------------------------------------------------------
+
+
+def test_miss_probability_cases():
+    spec = C.DeadlineSpec(deadline_s=2.0, p_dropout=0.1, p_straggler=0.3,
+                          slowdown=2.0)
+    on_time = float(C.miss_probability(np.float64(0.5), spec))
+    risky = float(C.miss_probability(np.float64(1.5), spec))   # 1.5*2 > 2
+    late = float(C.miss_probability(np.float64(3.0), spec))
+    assert on_time == pytest.approx(0.1)                # dropout only
+    assert risky == pytest.approx(0.1 + 0.9 * 0.3)      # + straggler tail
+    assert late == pytest.approx(1.0)
+    for d in (0.5, 1.5, 3.0):
+        assert float(C.miss_probability(np.float64(d), spec)) == \
+            pytest.approx(C._miss_probability_scalar(d, spec))
+
+
+# ---------------------------------------------------------------------------
+# retry_call / RetryPolicy
+# ---------------------------------------------------------------------------
+
+
+def _flaky(fail_times, exc=LinkTimeout):
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise exc(f"boom {calls['n']}")
+        return "ok"
+    return fn, calls
+
+
+def test_retry_succeeds_after_transient_failures():
+    fn, calls = _flaky(2)
+    pol = RetryPolicy(max_attempts=4, base_backoff_s=0.1, max_backoff_s=1.0)
+    result, attempts, backoff_s = retry_call(fn, pol)
+    assert result == "ok" and attempts == 3 and calls["n"] == 3
+    assert backoff_s == pytest.approx(0.1 + 0.2)    # exponential, uncapped
+
+
+def test_retry_backoff_caps():
+    fn, _ = _flaky(5)
+    pol = RetryPolicy(max_attempts=6, base_backoff_s=0.1, max_backoff_s=0.25)
+    result, attempts, backoff_s = retry_call(fn, pol)
+    assert result == "ok" and attempts == 6
+    assert backoff_s == pytest.approx(0.1 + 0.2 + 0.25 + 0.25 + 0.25)
+
+
+def test_retry_exhaustion_raises_with_accounting():
+    fn, calls = _flaky(99)
+    with pytest.raises(ExchangeFailed) as ei:
+        retry_call(fn, RetryPolicy(max_attempts=3, base_backoff_s=0.05))
+    assert ei.value.attempts == 3 and calls["n"] == 3
+    assert ei.value.backoff_s == pytest.approx(0.05 + 0.1)
+
+
+def test_retry_timeout_budget_with_fake_clock():
+    fn, calls = _flaky(99)
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 10.0        # each attempt "takes" 10 s
+        return t["now"]
+
+    pol = RetryPolicy(max_attempts=10, base_backoff_s=1.0, timeout_s=25.0)
+    with pytest.raises(ExchangeFailed) as ei:
+        retry_call(fn, pol, clock=clock)
+    assert "timeout budget" in str(ei.value)
+    assert calls["n"] < 10                     # budget cut the retries short
+
+
+def test_retry_does_not_catch_unlisted_exceptions():
+    def fn():
+        raise ValueError("not retryable")
+    with pytest.raises(ValueError):
+        retry_call(fn, RetryPolicy())
+
+
+def test_retry_sleep_is_injected():
+    fn, _ = _flaky(1)
+    pauses = []
+    retry_call(fn, RetryPolicy(max_attempts=2, base_backoff_s=0.5),
+               sleep=pauses.append)
+    assert pauses == [0.5]
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_opens_after_threshold_and_half_opens():
+    br = CircuitBreaker(failure_threshold=2, cooldown_rounds=3)
+    assert br.allow(0, 0)
+    br.record_failure(0, 0)
+    assert br.allow(0, 1)                       # one failure: still closed
+    br.record_failure(0, 1)                     # second consecutive: open
+    assert not br.allow(0, 2) and br.evicted(2) == [0]
+    assert not br.allow(0, 4)                   # cool-down covers 2..4
+    assert br.allow(0, 5)                       # half-open probe
+    br.record_failure(0, 5)                     # probe fails: re-open at once
+    assert not br.allow(0, 6)
+    assert br.allow(0, 9)
+    br.record_success(0)                        # probe succeeds: fully closed
+    br.record_failure(0, 10)
+    assert br.allow(0, 11)                      # counter was reset
+
+
+def test_breaker_is_per_device():
+    br = CircuitBreaker(failure_threshold=1, cooldown_rounds=2)
+    br.record_failure(3, 0)
+    assert not br.allow(3, 1) and br.allow(4, 1)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector semantics
+# ---------------------------------------------------------------------------
+
+
+def test_injector_outage_recovers_on_retry():
+    fm = FaultModel(outage_prob=1.0)
+    inj = FaultInjector(fm.realize(2, 1, seed=0))
+    with pytest.raises(LinkTimeout):
+        inj.check(0, 0, attempt=1)
+    inj.check(0, 0, attempt=2)                  # retry succeeds
+
+
+def test_injector_dropout_never_recovers():
+    fm = FaultModel(dropout_prob=1.0)
+    inj = FaultInjector(fm.realize(2, 1, seed=0))
+    for attempt in (1, 2, 5):
+        with pytest.raises(LinkTimeout):
+            inj.check(1, 0, attempt=attempt)
+    assert inj.is_member(1, 0)                  # member, just unreachable
+
+
+# ---------------------------------------------------------------------------
+# SplitFineTuner under injected churn (real JAX training, tiny config)
+# ---------------------------------------------------------------------------
+
+
+def _make_tuner(n_devices, n_rounds, fm, *, quorum=0.5, seed=0,
+                retry=None, breaker=None):
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    datasets = make_fleet_datasets(cfg, n_devices, vocab=cfg.vocab_size,
+                                   seed=1)
+    sim = SimParams(local_epochs=1, mini_batch=4, seq_len=32)
+    inj = FaultInjector(fm.realize(n_rounds, n_devices, seed=seed))
+    return SplitFineTuner(
+        cfg, params["frozen"], params["lora"],
+        adamw(constant_schedule(3e-3)),
+        devices=list(EDGE_FLEET[:n_devices]), server=SERVER_RTX4060TI,
+        channels=[WirelessChannel("normal", seed=i)
+                  for i in range(n_devices)],
+        datasets=datasets, sim=sim, policy="card", fault_injector=inj,
+        retry_policy=retry or RetryPolicy(max_attempts=2,
+                                          base_backoff_s=0.01),
+        breaker=breaker or CircuitBreaker(), quorum=quorum)
+
+
+def test_protocol_outages_retried_transparently():
+    ft = _make_tuner(2, 3, FaultModel(outage_prob=1.0))
+    res = ft.run(3)
+    ok = [l for l in res.logs if l.status == "ok"]
+    assert len(ok) == 6                         # every slot survived
+    assert all(l.attempts == 2 for l in ok)     # via one retry each
+    assert all(l.backoff_s > 0 for l in ok)
+    assert res.rounds_committed() == 3
+
+
+def test_protocol_dropout_breaker_evicts_repeat_offender():
+    # device 1 hard-drops every round; threshold 2 evicts it after 2 rounds
+    fm = FaultModel()
+    real = fm.realize(6, 2, seed=0)
+    real.dropout[:, 1] = True
+    ft = _make_tuner(2, 6, fm, quorum=0.4,
+                     breaker=CircuitBreaker(failure_threshold=2,
+                                            cooldown_rounds=10))
+    ft.fault_injector = FaultInjector(real)
+    res = ft.run(6)
+    by_status = {}
+    for l in res.logs:
+        if l.device == ft.devices[1].name:
+            by_status.setdefault(l.status, 0)
+            by_status[l.status] += 1
+    assert by_status.get("dropped") == 2        # two strikes
+    assert by_status.get("evicted") == 4        # then the breaker opens
+    # healthy device 0 carries every round to quorum (1 of <=2 attempted)
+    assert res.rounds_committed() == 6
+
+
+def test_protocol_below_quorum_rolls_back():
+    fm = FaultModel(dropout_prob=1.0)           # nobody ever survives
+    ft = _make_tuner(2, 2, fm, quorum=0.5,
+                     breaker=CircuitBreaker(failure_threshold=99,
+                                            cooldown_rounds=1))
+    lora_before = jax.device_get(ft.lora)
+    res = ft.run(2)
+    assert res.rounds_committed() == 0
+    assert all(not s.committed for s in res.round_summaries)
+    # adapters rolled back to their initial state
+    after = jax.device_get(res.lora)
+    for a, b in zip(jax.tree_util.tree_leaves(lora_before),
+                    jax.tree_util.tree_leaves(after), strict=True):
+        np.testing.assert_array_equal(a, b)
+    assert np.isnan(res.mean_delay())           # NaN-safe, not a crash
+    assert res.losses() == []
+
+
+def test_protocol_absent_members_are_skipped_not_failed():
+    fm = FaultModel(initial_absent_prob=1.0, rejoin_prob=0.0)
+    ft = _make_tuner(2, 2, fm)
+    res = ft.run(2)
+    assert all(l.status == "absent" for l in res.logs)
+    assert all(s.attempted == 0 for s in res.round_summaries)
+    assert not any(s.committed for s in res.round_summaries)

@@ -363,6 +363,70 @@ def test_dtype_promo_ok_weak_python_literal():
 
 
 # ---------------------------------------------------------------------------
+# fault-hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_fault_hygiene_flags_bare_except_and_silent_swallow():
+    found = rules_of("""
+        def fetch(link):
+            try:
+                return link.recv()
+            except:
+                return None
+
+        def poll(link):
+            try:
+                link.ping()
+            except Exception:
+                pass
+    """, "fault-hygiene")
+    assert len(found) == 2
+    assert "bare `except:`" in found[0].message
+    assert "pass-only" in found[1].message
+
+
+def test_fault_hygiene_ok_narrow_or_handled_except():
+    found = rules_of("""
+        def fetch(link, log):
+            try:
+                return link.recv()
+            except TimeoutError:
+                pass                      # narrow type: fine even pass-only
+            except Exception as e:
+                log.warning("recv failed: %s", e)
+                raise
+    """, "fault-hygiene")
+    assert found == []
+
+
+def test_fault_hygiene_flags_unsuffixed_timeout_bindings():
+    found = rules_of("""
+        timeout = 30
+        DEADLINE: float = 2.5
+
+        def wait(link, poll_timeout=0.1):
+            link.recv(deadline=5.0)
+    """, "fault-hygiene")
+    assert len(found) == 4
+    assert all("unit suffix" in f.message for f in found)
+
+
+def test_fault_hygiene_ok_suffixed_or_nonnumeric():
+    found = rules_of("""
+        timeout_s = 30.0
+        deadline_ms: float = 2500.0
+
+        def wait(link, poll_timeout_s=0.1, deadline=None):
+            link.recv(deadline=deadline, timeout=compute_budget())
+            settings(deadline=None)
+            flag = True
+            hard_timeout = is_hard()      # not a literal
+    """, "fault-hygiene")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
 # pragmas / baseline / report
 # ---------------------------------------------------------------------------
 

@@ -13,12 +13,12 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def _run_py(code: str, timeout=560):
+def _run_py(code: str, timeout_s=560):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env.pop("JAX_PLATFORMS", None)
     return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, timeout=timeout,
+                          capture_output=True, text=True, timeout=timeout_s,
                           env=env)
 
 

@@ -37,6 +37,7 @@ RULES = (
     "unit-suffix",    # arithmetic mixing incompatible unit-suffixed names
     "prng-reuse",     # jax.random keys consumed more than once / in loops
     "dtype-promo",    # strong-typed scalars widening f32/bf16 hot paths
+    "fault-hygiene",  # swallowed exceptions, unsuffixed timeout/deadline
     "parse-error",    # file does not parse (always reported)
 )
 
@@ -232,10 +233,11 @@ def iter_py_files(paths: Sequence[str]) -> List[Path]:
 
 
 def default_checkers():
-    from tools.splint import (dtype_rules, jit_hygiene, pallas_rules,
-                              prng_rules, trace_safety, units)
+    from tools.splint import (dtype_rules, fault_rules, jit_hygiene,
+                              pallas_rules, prng_rules, trace_safety, units)
     return [trace_safety.check, jit_hygiene.check, pallas_rules.check,
-            units.check, prng_rules.check, dtype_rules.check]
+            units.check, prng_rules.check, dtype_rules.check,
+            fault_rules.check]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,108 @@
+"""fault-hygiene rule: failure paths that silently swallow or mis-scale.
+
+The churn-tolerance layer (``repro.core.faults``) only degrades gracefully
+if (a) exception handlers never eat errors they cannot handle and (b) every
+timeout/deadline constant carries an explicit time-unit suffix — a bare
+``timeout = 30`` next to a ``deadline_ms`` is exactly the class of bug that
+turns a 30 s retry budget into a 30 ms one.
+
+Detected:
+
+  * bare ``except:`` — swallows ``SystemExit``/``KeyboardInterrupt`` and
+    makes injected-fault tests pass vacuously;
+  * ``except Exception:`` / ``except BaseException:`` whose body is only
+    ``pass`` / ``...`` — a failure path with no accounting at all;
+  * a name containing the token ``timeout`` or ``deadline`` bound to a
+    numeric literal while carrying no unit suffix the registry in
+    :mod:`tools.splint.units` recognizes (assignments, annotated
+    assignments, function-argument defaults, and call keywords).
+
+``timeout_s = 30.0`` and ``deadline=None`` are both fine; ``timeout = 30``
+is not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from tools.splint.engine import Finding, dotted
+from tools.splint.units import dimension_of
+
+RULE = "fault-hygiene"
+
+_TOKENS = {"timeout", "deadline"}
+_BROAD = {"Exception", "BaseException", "builtins.Exception",
+          "builtins.BaseException"}
+
+
+def _is_numeric_literal(node: Optional[ast.AST]) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and not isinstance(node.value, bool))
+
+
+def _unsuffixed_fault_name(name: str) -> bool:
+    toks = name.lower().rstrip("_").split("_")
+    return bool(_TOKENS & set(toks)) and dimension_of(name) is None
+
+
+def _pass_only(body: Sequence[ast.stmt]) -> bool:
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is ...):
+            continue
+        return False
+    return True
+
+
+def check(tree: ast.AST, lines: Sequence[str], path: str) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, message: str) -> None:
+        findings.append(Finding(RULE, path, node.lineno, node.col_offset,
+                                message))
+
+    def flag_name(node: ast.AST, name: str, where: str) -> None:
+        flag(node, f"{where} `{name}` is a numeric literal without a unit "
+                   f"suffix (use `{name}_s` or another registry suffix)")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler):
+            if node.type is None:
+                flag(node, "bare `except:` swallows SystemExit/"
+                           "KeyboardInterrupt; catch specific exceptions")
+            elif dotted(node.type) in _BROAD and _pass_only(node.body):
+                flag(node, f"`except {dotted(node.type)}:` with a pass-only "
+                           f"body hides failures; log, re-raise, or narrow "
+                           f"the exception type")
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) \
+                        and _unsuffixed_fault_name(tgt.id) \
+                        and _is_numeric_literal(node.value):
+                    flag_name(node, tgt.id, "assignment to")
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name) \
+                    and _unsuffixed_fault_name(node.target.id) \
+                    and _is_numeric_literal(node.value):
+                flag_name(node, node.target.id, "assignment to")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            positional = a.posonlyargs + a.args
+            defaults = [None] * (len(positional) - len(a.defaults)) \
+                + list(a.defaults)
+            pairs = list(zip(positional, defaults)) \
+                + list(zip(a.kwonlyargs, a.kw_defaults))
+            for arg, default in pairs:
+                if _unsuffixed_fault_name(arg.arg) \
+                        and _is_numeric_literal(default):
+                    flag_name(arg, arg.arg, "default for parameter")
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg and _unsuffixed_fault_name(kw.arg) \
+                        and _is_numeric_literal(kw.value):
+                    flag_name(kw.value, kw.arg, "keyword argument")
+    return findings
