@@ -30,7 +30,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from tools.splint.units import check_key_units  # noqa: E402
 
 BENCH_FILES = ("BENCH_kernels.json", "BENCH_card_calibration.json",
-               "BENCH_fleet_scale.json", "BENCH_churn.json")
+               "BENCH_fleet_scale.json", "BENCH_churn.json",
+               "BENCH_serving.json")
 
 # required top-level keys per schema tag; every payload must carry
 # "schema", "mode", and a (possibly empty) "gates" dict of positive floats
@@ -39,6 +40,7 @@ REQUIRED_KEYS: Dict[str, Tuple[str, ...]] = {
     "bench-card-calibration/v1": ("dryrun_status", "dryrun_rows", "measured"),
     "bench-fleet-scale/v1": ("scaling", "big_fleet"),
     "bench-churn/v1": ("sweep", "devices", "quorum"),
+    "bench-serving/v1": ("sweep", "arch", "engine"),
 }
 
 
@@ -90,6 +92,28 @@ def validate(path: str) -> List[str]:
             if not isinstance(frac, (int, float)) or not 0.0 <= frac <= 1.0:
                 errors.append(f"{path}: survivor_fraction {frac!r} "
                               "not in [0, 1]")
+    if schema == "bench-serving/v1" and not errors:
+        sweep = payload["sweep"]
+        if not sweep:
+            errors.append(f"{path}: sweep is empty")
+        for row in sweep:
+            if row.get("drained") is not True:
+                errors.append(f"{path}: sweep row slots={row.get('slots')} "
+                              f"adapters={row.get('adapters')} did not "
+                              "drain — throughput numbers are meaningless")
+            for key in ("requests_per_s", "tokens_per_sec", "mean_ttft_s"):
+                val = row.get(key)
+                if not isinstance(val, (int, float)) or not val > 0 \
+                        or val != val or val == float("inf"):
+                    errors.append(f"{path}: sweep {key} must be a positive "
+                                  f"finite number, got {val!r}")
+        # the point of the sweep is a slot x adapter grid: require at least
+        # two distinct values along each axis
+        for axis in ("slots", "adapters"):
+            vals = {row.get(axis) for row in sweep}
+            if len(vals) < 2:
+                errors.append(f"{path}: sweep covers only {sorted(vals)} "
+                              f"for {axis!r} (need >= 2 distinct values)")
     return errors
 
 

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract:
   fig3_decisions   — Fig. 3(a)/(b): cut-layer + frequency decisions
   fig4_comparison  — Fig. 4: delay/energy vs Server-only / Device-only
   fleet_scale      — vectorized engine throughput on heterogeneous fleets
+  serving_sweep    — multi-tenant LoRA serving (slots x adapters throughput)
   card_algorithm   — Alg. 1 runtime (O(I) decisions/second)
   split_step       — one real split fine-tuning epoch (tiny model, CPU)
   kernel_*         — Pallas kernel micro-benchmarks
@@ -60,6 +61,15 @@ def smoke() -> None:
     rows.append(("churn_smoke", us,
                  f"survivors={worst['survivor_fraction']:.2f};"
                  f"quorum_rate={worst['quorum_rate']:.2f}"))
+    from benchmarks import serving_bench
+    us, serving = _timed(lambda: serving_bench.run(
+        slot_counts=(2, 4), adapter_counts=(1, 2), requests=4,
+        prompt_len=6, max_new=3, tick_iters=3))
+    busiest = serving["sweep"][-1]
+    rows.append(("serving_smoke", us,
+                 f"completed={busiest['completed']};"
+                 f"drained={busiest['drained']};"
+                 f"tok_per_s={busiest['tokens_per_sec']:.0f}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -107,6 +117,16 @@ def main() -> None:
                  f"dropout={worst['dropout_rate']};"
                  f"survivors={worst['survivor_fraction']:.2f};"
                  f"rounds_per_commit={worst['rounds_per_commit']:.2f}"))
+
+    # --- multi-tenant serving (slots x adapters throughput) -------------------
+    from benchmarks import serving_bench
+    us, serving = _timed(lambda: serving_bench.run())
+    busiest = serving["sweep"][-1]
+    rows.append(("serving_sweep", us,
+                 f"slots={busiest['slots']};adapters={busiest['adapters']};"
+                 f"rps={busiest['requests_per_s']:.1f};"
+                 f"tok_per_s={busiest['tokens_per_sec']:.0f};"
+                 f"ttft_s={busiest['mean_ttft_s']:.4f}"))
 
     # --- CARD runtime (Alg. 1 is O(I)) ---------------------------------------
     from repro.configs.base import get_config

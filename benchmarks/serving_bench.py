@@ -1,0 +1,168 @@
+"""Multi-tenant serving throughput: RPS / TTFT / tokens-per-sec trajectory.
+
+Sweeps the continuous-batching engine over slot counts x adapter counts
+(one frozen backbone, per-request LoRA adapters gathered in-jit from an
+``AdapterBank``) and reports requests-per-second, mean time-to-first-token
+and decoded tokens-per-second for each point. A run that fails to drain is
+a hard error — undrained stats are the silent-failure mode this bench
+exists to catch. The gate is the warm jitted decode-tick per slot count
+(host bookkeeping and Pallas interpret times are never gated).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--smoke] \
+        [--json BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as model_lib
+from repro.serving import (AdapterBank, ChannelAdmissionController, Request,
+                           ServingEngine)
+
+SCHEMA = "bench-serving/v1"
+ARCH = "qwen3-0.6b"
+ADAPTER_SEEDS = (0, 7, 13, 21, 42, 77, 101, 202)
+
+
+def _make_requests(cfg, n: int, n_adapters: int, prompt_len: int,
+                   max_new: int, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                        dtype=np.int32).astype(np.int32),
+                    max_new=max_new, adapter_id=i % n_adapters)
+            for i in range(n)]
+
+
+def _time_decode_tick(cfg, frozen, bank, slots: int, max_len: int,
+                      iters: int) -> float:
+    """Warm wall time of ONE jitted decode tick (the hot path under load:
+    every slot occupied, per-slot positions and adapter ids)."""
+    eng = ServingEngine(cfg, frozen, bank, slots=slots, max_len=max_len)
+    toks = jnp.ones((slots, 1), jnp.int32)
+    ts = jnp.arange(1, slots + 1, dtype=jnp.int32)
+    ids = jnp.arange(slots, dtype=jnp.int32) % bank.n
+    stacked = eng._stacked()
+    logits, cache = eng._step(eng.frozen, stacked, eng.cache, toks, ts, ids)
+    jax.block_until_ready(logits)                  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        logits, cache = eng._step(eng.frozen, stacked, cache, toks, ts, ids)
+    jax.block_until_ready((logits, cache))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(*, slot_counts=(2, 4), adapter_counts=(1, 4), requests: int = 8,
+        prompt_len: int = 12, max_new: int = 6, prefill_chunk: int = 4,
+        max_len: int = 64, tick_iters: int = 20, seed: int = 0) -> Dict:
+    cfg = get_config(ARCH).reduced()
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    frozen = params["frozen"]
+    n_max = max(adapter_counts)
+    adapters = [model_lib.init_params(jax.random.PRNGKey(s), cfg)["lora"]
+                for s in ADAPTER_SEEDS[:n_max]]
+
+    out: Dict = {"arch": ARCH,
+                 "engine": {"max_len": max_len,
+                            "prefill_chunk": prefill_chunk,
+                            "requests": requests,
+                            "prompt_len": prompt_len,
+                            "max_new": max_new},
+                 "sweep": []}
+    for slots in slot_counts:
+        for n_adapters in adapter_counts:
+            bank = AdapterBank(adapters[:n_adapters])
+            eng = ServingEngine(cfg, frozen, bank, slots=slots,
+                                max_len=max_len,
+                                prefill_chunk=prefill_chunk)
+            for req in _make_requests(cfg, requests, n_adapters,
+                                      prompt_len, max_new, seed):
+                eng.submit(req)
+            stats = eng.run_until_drained(max_ticks=50_000)
+            if not stats["drained"]:
+                raise RuntimeError(
+                    f"serving bench did not drain at slots={slots} "
+                    f"adapters={n_adapters}: pending={stats['pending']} "
+                    f"after {stats['ticks']} ticks")
+            out["sweep"].append({
+                "slots": slots,
+                "adapters": n_adapters,
+                "requests": requests,
+                "completed": stats["completed"],
+                "drained": stats["drained"],
+                "ticks": stats["ticks"],
+                "prefills": stats["prefills"],
+                "tokens": stats["tokens"],
+                "requests_per_s": stats["requests_per_s"],
+                "tokens_per_sec": stats["tokens_per_sec"],
+                "mean_ttft_s": stats["mean_ttft_s"],
+                "wall_s": stats["wall_s"],
+            })
+
+    # channel-aware admission under a tight budget: contention must show up
+    # in the per-tenant queueing stats (informational, not gated)
+    bank = AdapterBank(adapters[:min(2, n_max)])
+    ctl = ChannelAdmissionController(
+        bandwidth_hz=4e4, training_reserve_frac=0.5,
+        token_rate_per_s=2000.0, bits_per_token=32.0, seed=seed)
+    eng = ServingEngine(cfg, frozen, bank, slots=max(slot_counts),
+                        max_len=max_len, prefill_chunk=prefill_chunk,
+                        admission=ctl)
+    for req in _make_requests(cfg, requests, bank.n, prompt_len, max_new,
+                              seed + 1):
+        eng.submit(req)
+    adm_stats = eng.run_until_drained(max_ticks=50_000)
+    if not adm_stats["drained"]:
+        raise RuntimeError("admission-controlled serving run did not drain: "
+                           f"pending={adm_stats['pending']}")
+    out["admission"] = adm_stats["admission"]
+
+    bank_full = AdapterBank(adapters)
+    out["gates"] = {
+        f"serving_decode_tick_s_{slots}slot":
+            _time_decode_tick(cfg, frozen, bank_full, slots, max_len,
+                              tick_iters)
+        for slots in slot_counts}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep, just prove the path runs")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the BENCH_serving.json payload here")
+    args = ap.parse_args()
+    if args.smoke:
+        res = run(slot_counts=(2, 4), adapter_counts=(1, 2), requests=6,
+                  prompt_len=9, max_new=4, tick_iters=10)
+    else:
+        res = run(slot_counts=(2, 4, 8), adapter_counts=(1, 4, 8),
+                  requests=24, prompt_len=24, max_new=12, max_len=128,
+                  tick_iters=50)
+    res["schema"] = SCHEMA
+    res["mode"] = "smoke" if args.smoke else "full"
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    print("slots,adapters,completed,rps,mean_ttft_s,tokens_per_sec,ticks")
+    for row in res["sweep"]:
+        print(f"{row['slots']},{row['adapters']},{row['completed']},"
+              f"{row['requests_per_s']:.2f},{row['mean_ttft_s']:.4f},"
+              f"{row['tokens_per_sec']:.1f},{row['ticks']}")
+    for name, val in res["gates"].items():
+        print(f"gate {name}: {val * 1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

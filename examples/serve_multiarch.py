@@ -48,25 +48,41 @@ def main() -> None:
 
 
 def continuous_batching_demo() -> None:
-    """vLLM-style continuous batching over the cached decode path."""
+    """Multi-tenant continuous batching: one frozen backbone, a bank of
+    fleet LoRA adapters gathered per-slot inside the jitted decode tick,
+    chunked prefill, and channel-aware admission sharing the edge band
+    with SL training."""
     import numpy as np
-    from repro.serving import Request, ServingEngine
+    from repro.serving import (AdapterBank, ChannelAdmissionController,
+                               Request, ServingEngine)
 
     cfg = get_config("qwen3-0.6b").reduced()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=3,
-                        max_len=64)
+    bank = AdapterBank([M.init_params(jax.random.PRNGKey(s), cfg)["lora"]
+                        for s in (0, 7, 13)])
+    ctl = ChannelAdmissionController(bandwidth_hz=2e5,
+                                     training_reserve_frac=0.5,
+                                     token_rate_per_s=200.0, seed=0)
+    eng = ServingEngine(cfg, params["frozen"], bank, slots=3, max_len=64,
+                        prefill_chunk=4, admission=ctl)
     rng = np.random.default_rng(0)
     for i in range(6):
         eng.submit(Request(uid=i,
                            prompt=rng.integers(0, cfg.vocab_size, 4 + i,
                                                dtype=np.int32),
-                           max_new=8))
+                           max_new=8, adapter_id=i % bank.n))
     stats = eng.run_until_drained()
-    print(f"continuous batching: {stats['completed']} reqs, "
-          f"{stats['tokens']} tokens in {stats['ticks']} ticks "
+    print(f"continuous batching: {stats['completed']} reqs x "
+          f"{bank.n} adapters, {stats['tokens']} tokens in "
+          f"{stats['ticks']} ticks + {stats['prefills']} prefill chunks "
           f"({stats['tokens_per_sec']:.1f} tok/s CPU, "
           f"ttft {stats['mean_ttft_s']:.2f}s)")
+    adm = stats["admission"]
+    for aid, t in adm["tenants"].items():
+        print(f"  tenant adapter={aid}: {t['admitted']} admitted, "
+              f"{t['blocked_attempts']} blocked attempts, "
+              f"mean demand {t['mean_demand_hz'] / 1e3:.1f} kHz "
+              f"of {adm['capacity_hz'] / 1e3:.0f} kHz serving capacity")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,20 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return y.reshape(*lead, w.shape[-1])
 
 
+def lora_matmul_grouped(x: jax.Array, w: jax.Array, a: jax.Array,
+                        b: jax.Array, ids: jax.Array, scale: float = 1.0,
+                        **block_kw) -> jax.Array:
+    """Multi-tenant fused LoRA: y[g] = x[g] @ W + scale*(x[g] @ A[ids[g]])
+    @ B[ids[g]]. x: (G, M, K) or (G, K); a: (E, K, r); b: (E, r, N);
+    ids: (G,) int32 adapter index per request row."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[:, None, :]
+    y = _lm.lora_matmul_grouped(x, w, a, b, jnp.asarray(ids, jnp.int32),
+                                scale, interpret=_interpret(), **block_kw)
+    return y[:, 0] if squeeze else y
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     q_positions=None, k_positions=None,

@@ -16,6 +16,18 @@ def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return y.astype(x.dtype)
 
 
+def lora_matmul_grouped_ref(x: jax.Array, w: jax.Array, a: jax.Array,
+                            b: jax.Array, ids: jax.Array,
+                            scale: float = 1.0) -> jax.Array:
+    """x: (G, M, K); w: (K, N); a: (E, K, r); b: (E, r, N); ids: (G,)."""
+    y = jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32)
+    ag = a[ids].astype(x.dtype)                        # (G, K, r)
+    bg = b[ids].astype(x.dtype)                        # (G, r, N)
+    xa = jnp.matmul(x, ag, preferred_element_type=jnp.float32).astype(x.dtype)
+    y = y + scale * jnp.matmul(xa, bg, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0) -> jax.Array:
     """q: (BH, Sq, D); k, v: (BH, Skv, D); positions = arange."""

@@ -251,10 +251,59 @@ def _quant_kv(x: jax.Array):
     return q, scale
 
 
+def _cache_abs_positions(t: jax.Array, slots: int, window: int, b: int
+                         ) -> jax.Array:
+    """(B, slots) absolute position held by each cache slot after the write
+    at position(s) ``t`` (scalar or per-row (B,) vector).
+
+    Linear cache: slot j holds position j (stale j > t masked causally).
+    Ring (SWA):   slot j holds ``t - ((t - j) mod W)`` — valid iff >= 0.
+    """
+    j = jnp.arange(slots, dtype=jnp.int32)
+    if window and window <= slots:
+        tb = t[:, None] if t.ndim else jnp.broadcast_to(t, (b,))[:, None]
+        abs_pos = tb - ((tb - j[None, :]) % slots)
+        return jnp.where(abs_pos >= 0, abs_pos, 2**30)    # unwritten slots
+    return jnp.broadcast_to(j, (b, slots))
+
+
+def _write_kv(cache: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
+              slot: jax.Array, dtype, int8: bool
+              ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Write one token per row at ``slot`` (scalar or (B,) vector).
+
+    Returns (new_cache, dequantized k view, dequantized v view)."""
+    new_cache: Dict[str, jax.Array] = {}
+    if int8:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        entries = (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs))
+    else:
+        entries = (("k", k), ("v", v))
+    for name, val in entries:
+        if slot.ndim:                                      # per-row slots
+            rows = jnp.arange(val.shape[0])
+            new_cache[name] = cache[name].at[rows, slot].set(val[:, 0])
+        else:
+            new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val, slot, axis=1)
+    if int8:
+        k_cache = (new_cache["k"].astype(jnp.float32)
+                   * new_cache["k_scale"]).astype(dtype)
+        v_cache = (new_cache["v"].astype(jnp.float32)
+                   * new_cache["v_scale"]).astype(dtype)
+    else:
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
+    return new_cache, k_cache, v_cache
+
+
 def attention_decode(params: Params, lora: Optional[Params], x: jax.Array,
                      cache: Dict[str, jax.Array], cfg: ModelConfig, *,
-                     t: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode. x: (B,1,d); t: scalar int32 absolute position.
+                     t: jax.Array, use_lora_kernel: bool = False
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,d); t: int32 absolute position — a scalar
+    (whole batch at one position) or a (B,) vector (continuous-batching
+    serving: every row at its own position).
 
     Full cache: write at slot ``t``, attend over slots ``<= t``.
     Ring (SWA): write at ``t % W``; slot j holds absolute position
@@ -262,10 +311,15 @@ def attention_decode(params: Params, lora: Optional[Params], x: jax.Array,
     """
     scale = cfg.lora.scale
     b = x.shape[0]
-    pos = jnp.full((b, 1), t, jnp.int32)
-    q = lora_dense(x, params["wq"], maybe_lora(lora, "wq"), scale, params.get("bq"))
-    k = lora_dense(x, params["wk"], maybe_lora(lora, "wk"), scale, params.get("bk"))
-    v = lora_dense(x, params["wv"], maybe_lora(lora, "wv"), scale, params.get("bv"))
+    t = jnp.asarray(t, jnp.int32)
+    pos = t[:, None] if t.ndim else jnp.full((b, 1), t, jnp.int32)
+    uk = use_lora_kernel
+    q = lora_dense(x, params["wq"], maybe_lora(lora, "wq"), scale,
+                   params.get("bq"), uk)
+    k = lora_dense(x, params["wk"], maybe_lora(lora, "wk"), scale,
+                   params.get("bk"), uk)
+    v = lora_dense(x, params["wv"], maybe_lora(lora, "wv"), scale,
+                   params.get("bv"), uk)
     q = _split_heads(q, cfg.n_heads)
     k = _split_heads(k, cfg.n_kv_heads)
     v = _split_heads(v, cfg.n_kv_heads)
@@ -277,40 +331,77 @@ def attention_decode(params: Params, lora: Optional[Params], x: jax.Array,
 
     slots = cache["k"].shape[1]
     slot = (t % slots).astype(jnp.int32)
-    new_cache: Dict[str, jax.Array] = {}
-    if cfg.kv_cache_dtype == "int8":
-        kq, ks = _quant_kv(k)
-        vq, vs = _quant_kv(v)
-        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], kq, slot, axis=1)
-        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], vq, slot, axis=1)
-        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_scale"], ks, slot, axis=1)
-        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v_scale"], vs, slot, axis=1)
-        k_cache = (new_cache["k"].astype(jnp.float32)
-                   * new_cache["k_scale"]).astype(x.dtype)
-        v_cache = (new_cache["v"].astype(jnp.float32)
-                   * new_cache["v_scale"]).astype(x.dtype)
-    else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
-                                                      axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
-                                                      axis=1)
-        new_cache["k"], new_cache["v"] = k_cache, v_cache
-
-    j = jnp.arange(slots, dtype=jnp.int32)
-    if cfg.sliding_window and cfg.sliding_window <= slots:
-        abs_pos = t - ((t - j) % slots)          # ring-buffer positions
-        abs_pos = jnp.where(abs_pos >= 0, abs_pos, 2**30)  # unwritten slots
-    else:
-        abs_pos = j                              # linear cache
-    k_positions = jnp.broadcast_to(abs_pos, (b, slots))
+    new_cache, k_cache, v_cache = _write_kv(
+        cache, k, v, slot, x.dtype, cfg.kv_cache_dtype == "int8")
+    k_positions = _cache_abs_positions(t, slots, cfg.sliding_window, b)
 
     out = naive_attention(q, k_cache, v_cache, causal=True,
                           window=cfg.sliding_window,
                           q_positions=pos, k_positions=k_positions)
     out = out.reshape(b, 1, cfg.q_dim)
-    out = lora_dense(out, params["wo"], maybe_lora(lora, "wo"), scale)
+    out = lora_dense(out, params["wo"], maybe_lora(lora, "wo"), scale,
+                     None, uk)
+    return out, new_cache
+
+
+def attention_prefill(params: Params, lora: Optional[Params], x: jax.Array,
+                      cache: Dict[str, jax.Array], cfg: ModelConfig, *,
+                      positions: jax.Array, use_lora_kernel: bool = False
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cached multi-token prefill: one parallel pass over a prompt chunk.
+
+    x: (B, C, d) chunk hidden states; ``positions``: (C,) absolute positions
+    shared across the batch (chunks are fed in order, so the chunk occupies
+    a contiguous position range). Writes the chunk's K/V into the cache
+    (linear slot ``p``; ring slot ``p mod W`` — requires C <= slots so one
+    chunk never overwrites itself) and attends over the WHOLE cache with
+    the same masking semantics as ``attention_decode``, which is what makes
+    chunk i see chunks < i. Returns (out (B, C, q_dim), new cache).
+    """
+    scale = cfg.lora.scale
+    b, c, _ = x.shape
+    pos = jnp.broadcast_to(positions[None, :], (b, c)).astype(jnp.int32)
+    uk = use_lora_kernel
+    q = lora_dense(x, params["wq"], maybe_lora(lora, "wq"), scale,
+                   params.get("bq"), uk)
+    k = lora_dense(x, params["wk"], maybe_lora(lora, "wk"), scale,
+                   params.get("bk"), uk)
+    v = lora_dense(x, params["wv"], maybe_lora(lora, "wv"), scale,
+                   params.get("bv"), uk)
+    q = _split_heads(q, cfg.n_heads)
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    idx = (positions % slots).astype(jnp.int32)            # (C,)
+    new_cache: Dict[str, jax.Array] = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        entries = (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs))
+    else:
+        entries = (("k", k), ("v", v))
+    for name, val in entries:
+        new_cache[name] = cache[name].at[:, idx].set(val)
+    if cfg.kv_cache_dtype == "int8":
+        k_cache = (new_cache["k"].astype(jnp.float32)
+                   * new_cache["k_scale"]).astype(x.dtype)
+        v_cache = (new_cache["v"].astype(jnp.float32)
+                   * new_cache["v_scale"]).astype(x.dtype)
+    else:
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
+
+    k_positions = _cache_abs_positions(positions[-1], slots,
+                                       cfg.sliding_window, b)
+    out = naive_attention(q, k_cache, v_cache, causal=True,
+                          window=cfg.sliding_window,
+                          q_positions=pos, k_positions=k_positions)
+    out = out.reshape(b, c, cfg.q_dim)
+    out = lora_dense(out, params["wo"], maybe_lora(lora, "wo"), scale,
+                     None, uk)
     return out, new_cache

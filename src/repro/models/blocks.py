@@ -100,9 +100,37 @@ def init_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Param
     return c
 
 
+def layer_prefill(params: Params, lora: Optional[Params], x: jax.Array,
+                  cache: Params, cfg: ModelConfig, *, positions: jax.Array,
+                  use_lora_kernel: bool = False) -> Tuple[jax.Array, Params]:
+    """Cache-writing multi-token prefill through a layer. x: (B,C,d);
+    ``positions``: (C,) absolute positions of the chunk.
+
+    Attention-only families — SSM-bearing configs carry cumulative
+    recurrent state and go through the exact ``model.decode_scan`` path
+    instead (dispatched at the model level).
+    """
+    lget = (lambda k: lora.get(k) if lora is not None else None)
+    new_cache: Params = {}
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    attn_out, new_cache["kv"] = attn_mod.attention_prefill(
+        params["attn"], lget("attn"), h, cache["kv"], cfg, positions=positions,
+        use_lora_kernel=use_lora_kernel)
+    x = x + attn_out
+    h2 = rms_norm(x, params["norm2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        moe_out, _ = _moe_dispatch(params["moe"], lget("moe"), h2, cfg,
+                                   use_lora_kernel)
+        x = x + moe_out
+    else:
+        x = x + mlp_mod.mlp_forward(params["mlp"], lget("mlp"), h2, cfg,
+                                    use_lora_kernel)
+    return x, new_cache
+
+
 def layer_decode(params: Params, lora: Optional[Params], x: jax.Array,
-                 cache: Params, cfg: ModelConfig, *, t: jax.Array
-                 ) -> Tuple[jax.Array, Params]:
+                 cache: Params, cfg: ModelConfig, *, t: jax.Array,
+                 use_lora_kernel: bool = False) -> Tuple[jax.Array, Params]:
     """One-token decode through a layer. x: (B,1,d)."""
     lget = (lambda k: lora.get(k) if lora is not None else None)
     new_cache: Params = {}
@@ -112,7 +140,8 @@ def layer_decode(params: Params, lora: Optional[Params], x: jax.Array,
             params["mamba"], lget("mamba"), h, cache["ssm"], cfg)
         return x + out, new_cache
     attn_out, new_cache["kv"] = attn_mod.attention_decode(
-        params["attn"], lget("attn"), h, cache["kv"], cfg, t=t)
+        params["attn"], lget("attn"), h, cache["kv"], cfg, t=t,
+        use_lora_kernel=use_lora_kernel)
     if cfg.family == "hybrid":
         ssm_out, new_cache["ssm"] = mamba_mod.mamba_decode(
             params["mamba"], lget("mamba"), h, cache["ssm"], cfg)
@@ -121,8 +150,10 @@ def layer_decode(params: Params, lora: Optional[Params], x: jax.Array,
         x = x + attn_out
     h2 = rms_norm(x, params["norm2"], cfg.rms_eps)
     if cfg.family == "moe":
-        moe_out, _ = _moe_dispatch(params["moe"], lget("moe"), h2, cfg, False)
+        moe_out, _ = _moe_dispatch(params["moe"], lget("moe"), h2, cfg,
+                                   use_lora_kernel)
         x = x + moe_out
     else:
-        x = x + mlp_mod.mlp_forward(params["mlp"], lget("mlp"), h2, cfg)
+        x = x + mlp_mod.mlp_forward(params["mlp"], lget("mlp"), h2, cfg,
+                                    use_lora_kernel)
     return x, new_cache

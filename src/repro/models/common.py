@@ -108,7 +108,14 @@ def lora_dense(
     if use_kernel and lora is not None:
         from repro.kernels import ops as kernel_ops
 
-        y = kernel_ops.lora_matmul(x, w, lora["a"], lora["b"], scale)
+        if lora["a"].ndim == 3:
+            # per-row adapters (multi-tenant serving: one gathered pair per
+            # request row) -> grouped kernel, one grid cell per row
+            ids = jnp.arange(x.shape[0], dtype=jnp.int32)
+            y = kernel_ops.lora_matmul_grouped(x, w, lora["a"], lora["b"],
+                                               ids, scale)
+        else:
+            y = kernel_ops.lora_matmul(x, w, lora["a"], lora["b"], scale)
         if bias is not None:
             y = y + bias.astype(y.dtype)
         return y

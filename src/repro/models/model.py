@@ -180,9 +180,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 def decode_step(frozen: Params, lora: Optional[Params], cache: Params,
                 inputs: jax.Array, t: jax.Array, cfg: ModelConfig,
-                *, unroll: bool = False) -> Tuple[jax.Array, Params]:
+                *, unroll: bool = False, use_lora_kernel: bool = False
+                ) -> Tuple[jax.Array, Params]:
     """One token for the whole stack. inputs: (B,1) tokens or (B,1,d) embeds;
-    t: scalar int32 position. Returns (logits (B,vocab), new cache)."""
+    t: int32 position — scalar (lock-step batch) or (B,) vector (continuous
+    batching: each row decodes at its own position). Returns
+    (logits (B,vocab), new cache)."""
     x = embed_inputs(frozen, inputs, cfg)
 
     def body(x, scanned):
@@ -190,7 +193,8 @@ def decode_step(frozen: Params, lora: Optional[Params], cache: Params,
             lp, ll, lc = scanned
         else:
             (lp, lc), ll = scanned, None
-        x, new_c = blocks.layer_decode(lp, ll, x, lc, cfg, t=t)
+        x, new_c = blocks.layer_decode(lp, ll, x, lc, cfg, t=t,
+                                       use_lora_kernel=use_lora_kernel)
         return x, new_c
 
     if unroll:
@@ -209,6 +213,69 @@ def decode_step(frozen: Params, lora: Optional[Params], cache: Params,
                    if lora is not None else (frozen["layers"], cache))
         x, new_cache = jax.lax.scan(body, x, scanned)
     logits = logits_from_hidden(frozen, x, cfg)
+    return logits[:, 0], new_cache
+
+
+def decode_scan(frozen: Params, lora: Optional[Params], cache: Params,
+                tokens: jax.Array, t0: jax.Array, cfg: ModelConfig,
+                *, use_lora_kernel: bool = False) -> Tuple[jax.Array, Params]:
+    """Consume C tokens with C sequential ``decode_step``s in ONE jitted
+    call — bit-identical to the token-by-token host loop, so it is valid
+    for every family including cumulative-state SSM/hybrid. tokens:
+    (B, C) int32; t0: scalar int32 position of tokens[:, 0]. Returns
+    (logits after the last token (B, vocab), new cache)."""
+    c = tokens.shape[1]
+    t0 = jnp.asarray(t0, jnp.int32)
+
+    def body(carry, inp):
+        cache, _ = carry
+        tok, i = inp
+        logits, cache = decode_step(frozen, lora, cache, tok, t0 + i, cfg,
+                                    use_lora_kernel=use_lora_kernel)
+        return (cache, logits), None
+
+    xs = (jnp.moveaxis(tokens, 1, 0)[:, :, None],          # (C, B, 1)
+          jnp.arange(c, dtype=jnp.int32))
+    zero_logits = jnp.zeros((tokens.shape[0], cfg.padded_vocab), ACC_DTYPE)
+    (cache, logits), _ = jax.lax.scan(body, (cache, zero_logits), xs)
+    return logits, cache
+
+
+def prefill_chunk(frozen: Params, lora: Optional[Params], cache: Params,
+                  tokens: jax.Array, t0: jax.Array, cfg: ModelConfig,
+                  *, use_lora_kernel: bool = False
+                  ) -> Tuple[jax.Array, Params]:
+    """Parallel multi-token prefill against the decode cache: one forward
+    over a C-token chunk that writes K/V where ``decode_step`` would have,
+    position by position. tokens: (B, C) int32; t0: scalar int32 position
+    of tokens[:, 0]. Returns (last-position logits (B, vocab), new cache).
+
+    Attention families only — SSM/hybrid cumulative state cannot be
+    written in parallel; use ``decode_scan`` there (exact, still one
+    jitted call per chunk).
+    """
+    if cfg.has_ssm:
+        raise ValueError(
+            f"prefill_chunk does not support family={cfg.family!r} "
+            "(cumulative SSM state); use decode_scan")
+    x = embed_inputs(frozen, tokens, cfg)
+    positions = jnp.asarray(t0, jnp.int32) + jnp.arange(tokens.shape[1],
+                                                        dtype=jnp.int32)
+
+    def body(x, scanned):
+        if lora is not None:
+            lp, ll, lc = scanned
+        else:
+            (lp, lc), ll = scanned, None
+        x, new_c = blocks.layer_prefill(lp, ll, x, lc, cfg,
+                                        positions=positions,
+                                        use_lora_kernel=use_lora_kernel)
+        return x, new_c
+
+    scanned = ((frozen["layers"], lora["layers"], cache)
+               if lora is not None else (frozen["layers"], cache))
+    x, new_cache = jax.lax.scan(body, x, scanned)
+    logits = logits_from_hidden(frozen, x[:, -1:], cfg)
     return logits[:, 0], new_cache
 
 

@@ -1,1 +1,3 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.admission import ChannelAdmissionController  # noqa: F401
+from repro.serving.engine import (AdapterBank, Request,  # noqa: F401
+                                  ServingEngine)

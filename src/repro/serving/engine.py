@@ -1,19 +1,31 @@
-"""Continuous-batching serving engine over the cached decode path.
+"""Multi-tenant continuous-batching serving engine over the cached decode path.
 
-Deploys the SL-fine-tuned model: a fixed pool of batch slots shares one
-stacked KV/SSM cache; requests are admitted into free slots as others
-finish (continuous batching), every engine tick runs ONE jitted
-``decode_step`` for the whole pool, and per-slot state tracks prompt
-feeding vs generation. Slot recycling resets only that slot's cache lanes.
+Deploys the SL-fine-tuned *fleet*: a fixed pool of batch slots shares one
+stacked KV/SSM cache and ONE frozen backbone, while every slot decodes with
+its own LoRA adapter — the fleet's adapters are stacked into an
+``(n_adapters, ...)`` bank and each slot's pair is gathered *inside* the
+jitted step (``AdapterBank``), so one tick serves N users x N adapters.
 
-This is the decode_32k/long_500k dry-run shape driven end-to-end: the
-engine's ``step_fn`` is exactly what those combos lower at pod scale.
+Per-tick work is a single jitted ``decode_step`` with a per-slot position
+vector; prompt chunks are consumed by a jitted multi-token prefill
+(``model.prefill_chunk`` for attention families, exact ``model.decode_scan``
+for cumulative-state SSM/hybrid) before the slot joins the decode pool, so
+TTFT no longer scales as ``len(prompt) x tick_latency``.
+
+Slot recycling is lazy and copy-free: stale KV lanes are hidden by the
+causal/ring position masks (a request at position t only ever attends lanes
+it has itself written), and SSM state is zeroed inside the jitted step for
+rows starting at position 0. Admission never touches the cache.
+
+Admission can be gated by a channel-aware controller
+(``repro.serving.admission``) so serving and SL training share the edge
+bandwidth budget.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,16 +36,51 @@ from repro.models import model as model_lib
 from repro.models.common import Params
 
 
+class AdapterBank:
+    """The fleet's LoRA adapters stacked into one ``(n_adapters, ...)`` tree.
+
+    All adapters must share one tree structure and per-leaf shape (they come
+    from the same ``init_params`` config, fine-tuned per device). ``stacked``
+    leaves are ``(n_adapters, n_layers, ...)``; ``gather(ids)`` returns the
+    per-row adapter tree ``decode_step`` consumes (leaves
+    ``(n_layers, B, ...)`` so the layer scan slices to ``(B, ...)`` and
+    every LoRA matmul batch-broadcasts row-wise).
+    """
+
+    def __init__(self, adapters: Sequence[Params]):
+        adapters = list(adapters)
+        if not adapters:
+            raise ValueError("AdapterBank needs at least one adapter")
+        ref = jax.tree_util.tree_structure(adapters[0])
+        for i, a in enumerate(adapters[1:], start=1):
+            if jax.tree_util.tree_structure(a) != ref:
+                raise ValueError(
+                    f"adapter {i} tree structure differs from adapter 0")
+        self.n = len(adapters)
+        self.stacked: Params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *adapters)
+
+    @staticmethod
+    def gather(stacked: Params, ids: jax.Array) -> Params:
+        """stacked["layers"] leaves (E, n_layers, ...) + ids (B,) ->
+        {"layers": leaves (n_layers, B, ...)}. Trace-safe (used in jit)."""
+        return {"layers": jax.tree_util.tree_map(
+            lambda v: jnp.moveaxis(v[ids], 0, 1), stacked["layers"])}
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray                  # (S0,) int32 tokens
     max_new: int
+    adapter_id: int = 0                 # index into the engine's AdapterBank
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
+    admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    truncated: bool = False             # max_new clipped at submit()
 
     @property
     def done(self) -> bool:
@@ -52,58 +99,208 @@ class _Slot:
 
 
 class ServingEngine:
-    """Greedy continuous batching; one decode_step per tick for all slots."""
+    """Greedy continuous batching; one decode_step per tick for all slots.
+
+    ``lora`` may be a single adapter tree, a list of adapter trees, or an
+    ``AdapterBank`` — requests pick theirs via ``Request.adapter_id``.
+
+    ``on_overflow`` decides what ``submit`` does with a request whose
+    ``len(prompt) + max_new`` exceeds ``max_len``: ``"reject"`` raises,
+    ``"truncate"`` clips ``max_new`` and sets ``Request.truncated``.
+    """
 
     def __init__(self, cfg: ModelConfig, frozen: Params,
-                 lora: Optional[Params], *, slots: int = 4,
-                 max_len: int = 256, eos_id: Optional[int] = None):
+                 lora: Union[Params, Sequence[Params], AdapterBank, None],
+                 *, slots: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None, prefill_chunk: int = 16,
+                 admission=None, on_overflow: str = "reject",
+                 use_lora_kernel: bool = False):
+        if on_overflow not in ("reject", "truncate"):
+            raise ValueError("on_overflow must be 'reject' or 'truncate'")
         self.cfg = cfg
         self.frozen = frozen
-        self.lora = lora
+        if lora is None:
+            self.bank: Optional[AdapterBank] = None
+        elif isinstance(lora, AdapterBank):
+            self.bank = lora
+        elif isinstance(lora, (list, tuple)):
+            self.bank = AdapterBank(lora)
+        else:
+            self.bank = AdapterBank([lora])
+        self.n_adapters = 0 if self.bank is None else self.bank.n
         self.n_slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.admission = admission
+        self.on_overflow = on_overflow
+        self.use_lora_kernel = use_lora_kernel
         self.cache = model_lib.init_cache(cfg, slots, max_len)
-        self._zero_cache = jax.tree_util.tree_map(jnp.zeros_like, self.cache)
         self.slots = [_Slot() for _ in range(slots)]
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.ticks = 0
+        self.prefills = 0
 
-        # one token per slot per tick; positions differ per slot, so decode
-        # uses per-slot position via vmap-of-t? decode_step takes a single t —
-        # we keep per-slot positions aligned by feeding pad tokens into free
-        # slots and tracking validity host-side. Positions must therefore be
-        # per-slot: we shard the step over slots with vmap.
-        def one(frozen, lora, cache, tok, t):
-            # vmap maps over the cache's batch axis (1); decode_step expects
-            # it present — reinsert a singleton batch dim per slot
-            cache_b = jax.tree_util.tree_map(lambda c: c[:, None], cache)
-            logits, new_cache = model_lib.decode_step(
-                frozen, lora, cache_b, tok[None, :], t, cfg)
-            return logits[0], jax.tree_util.tree_map(
-                lambda c: c[:, 0], new_cache)
+        # chunked prefill: parallel cache-writing forward for attention
+        # families; exact in-jit decode scan for cumulative-state SSM/hybrid.
+        # The parallel path writes a chunk's K/V in one scatter, so a chunk
+        # must fit in the cache ring (chunk <= slot count of the KV cache).
+        self._prefill_mode = None
+        self._chunk = 0
+        if prefill_chunk > 1 and cfg.input_mode == "tokens":
+            self._prefill_mode = "scan" if cfg.has_ssm else "parallel"
+            self._chunk = prefill_chunk
+            if self._prefill_mode == "parallel" and cfg.family != "ssm":
+                kv_slots = int(jax.tree_util.tree_leaves(
+                    self.cache["kv"])[0].shape[2])
+                self._chunk = min(self._chunk, kv_slots)
+                if self._chunk < 2:
+                    self._prefill_mode, self._chunk = None, 0
 
-        self._step = jax.jit(jax.vmap(one, in_axes=(None, None, 1, 0, 0),
-                                      out_axes=(0, 1)))
+        def tick_fn(frozen, stacked, cache, toks, ts, ids):
+            lora_b = (None if stacked is None
+                      else AdapterBank.gather(stacked, ids))
+            cache = self._lazy_ssm_reset(cache, ts != 0)
+            return model_lib.decode_step(
+                frozen, lora_b, cache, toks, ts, cfg,
+                use_lora_kernel=use_lora_kernel)
+
+        def prefill_fn(frozen, stacked, cache, toks, slot, t0, aid):
+            # extract ONE slot lane, run the chunk, write the lane back —
+            # never touches the other slots' in-flight lanes.
+            lane = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                cache)
+            lane = self._lazy_ssm_reset(lane, (t0 != 0)[None])
+            lora_b = None
+            if stacked is not None:
+                lora_b = {"layers": jax.tree_util.tree_map(
+                    lambda v: v[aid], stacked["layers"])}
+            if self._prefill_mode == "parallel":
+                logits, lane = model_lib.prefill_chunk(
+                    frozen, lora_b, lane, toks, t0, cfg,
+                    use_lora_kernel=use_lora_kernel)
+            else:
+                logits, lane = model_lib.decode_scan(
+                    frozen, lora_b, lane, toks, t0, cfg,
+                    use_lora_kernel=use_lora_kernel)
+            cache = jax.tree_util.tree_map(
+                lambda c, la: jax.lax.dynamic_update_slice_in_dim(
+                    c, la, slot, axis=1),
+                cache, lane)
+            return logits, cache
+
+        self._step = jax.jit(tick_fn)
+        self._prefill = jax.jit(prefill_fn) if self._prefill_mode else None
+
+    @staticmethod
+    def _lazy_ssm_reset(cache: Params, keep: jax.Array) -> Params:
+        """Zero SSM lanes of rows starting a new request (position 0).
+
+        KV lanes need no reset at all: the causal/ring position masks in
+        ``attention_decode`` only expose lanes the current request has
+        itself written. SSM state is cumulative, so it is reset in-jit —
+        no host-side cache copy ever happens on admission.
+        """
+        if "ssm" not in cache:
+            return cache
+        def mask(c):
+            # c: (n_layers, B, ...); keep: (B,)
+            shape = (1, c.shape[1]) + (1,) * (c.ndim - 2)
+            return jnp.where(keep.reshape(shape), c, jnp.zeros((), c.dtype))
+        return {**cache,
+                "ssm": jax.tree_util.tree_map(mask, cache["ssm"])}
 
     # --- API -------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if self.bank is not None and not (0 <= req.adapter_id < self.bank.n):
+            raise ValueError(
+                f"request {req.uid}: adapter_id {req.adapter_id} out of "
+                f"range for a bank of {self.bank.n}")
+        need = len(req.prompt) + req.max_new
+        if need > self.max_len:
+            if self.on_overflow == "truncate":
+                clipped = self.max_len - len(req.prompt)
+                if clipped <= 0:
+                    raise ValueError(
+                        f"request {req.uid}: prompt of {len(req.prompt)} "
+                        f"tokens alone exceeds max_len={self.max_len}")
+                req.max_new = clipped
+                req.truncated = True
+            else:
+                raise ValueError(
+                    f"request {req.uid}: len(prompt) + max_new = {need} "
+                    f"exceeds max_len = {self.max_len}; decode past the "
+                    "cache end would corrupt the last cache lane "
+                    "(on_overflow='truncate' clips instead)")
         req.submitted_at = time.time()
+        if self.admission is not None:
+            self.admission.register(req)
         self.queue.append(req)
+
+    def _stacked(self):
+        return None if self.bank is None else self.bank.stacked
 
     def _admit(self) -> None:
         for slot_idx, slot in enumerate(self.slots):
-            if slot.free and self.queue:
-                req = self.queue.pop(0)
-                slot.request = req
-                slot.pos = 0
-                slot.fed = 0
-                # reset this slot's cache lanes
-                self.cache = jax.tree_util.tree_map(
-                    lambda c, z, i=slot_idx: c.at[:, i].set(z[:, i]),
-                    self.cache, self._zero_cache)
+            if not slot.free or not self.queue:
+                continue
+            req = self.queue[0]
+            now = time.time()
+            if self.admission is not None \
+                    and not self.admission.try_admit(req, now):
+                break                   # FIFO: head-of-line blocks the rest
+            self.queue.pop(0)
+            req.admitted_at = now
+            slot.request = req
+            slot.pos = 0
+            slot.fed = 0
+            # NO cache reset here (see _lazy_ssm_reset) — admission is O(1).
+            self._prefill_slot(slot_idx, slot, req)
+
+    def _prefill_slot(self, slot_idx: int, slot: _Slot, req: Request) -> None:
+        """Consume all full prompt chunks in jitted multi-token steps; any
+        ragged tail is fed token-by-token by the decode tick (keeping chunk
+        shapes static means exactly one compile per engine)."""
+        if not self._chunk:
+            return
+        n_full = len(req.prompt) // self._chunk
+        if n_full == 0:
+            return
+        logits = None
+        for ci in range(n_full):
+            lo = ci * self._chunk
+            toks = jnp.asarray(
+                np.asarray(req.prompt[lo:lo + self._chunk],
+                           np.int32)[None, :])
+            logits, self.cache = self._prefill(
+                self.frozen, self._stacked(), self.cache, toks,
+                jnp.int32(slot_idx), jnp.int32(slot.pos),
+                jnp.int32(req.adapter_id))
+            slot.pos += self._chunk
+            slot.fed += self._chunk
+            self.prefills += 1
+        if slot.fed == len(req.prompt):
+            # the whole prompt was chunk-consumed: the first output token
+            # comes straight from the prefill logits (this is the TTFT win)
+            nxt = int(np.argmax(
+                np.asarray(logits)[0, :self.cfg.vocab_size]))
+            self._emit(slot, req, nxt, time.time())
+
+    def _emit(self, slot: _Slot, req: Request, nxt: int, now: float) -> None:
+        """Record one generated token and retire the request when done."""
+        if req.first_token_at is None:
+            req.first_token_at = now
+        req.output.append(nxt)
+        hit_eos = self.eos_id is not None and nxt == self.eos_id
+        if len(req.output) >= req.max_new or hit_eos \
+                or slot.pos >= self.max_len - 1:
+            req.finished_at = now
+            self.completed.append(req)
+            slot.request = None
+            if self.admission is not None:
+                self.admission.release(req, now)
 
     def tick(self) -> int:
         """One engine step; returns number of active slots."""
@@ -114,19 +311,21 @@ class ServingEngine:
 
         toks = np.zeros((self.n_slots, 1), np.int32)
         ts = np.zeros((self.n_slots,), np.int32)
+        ids = np.zeros((self.n_slots,), np.int32)
         for i, slot in enumerate(self.slots):
             if slot.free:
                 continue
             req = slot.request
             if slot.fed < len(req.prompt):
-                toks[i, 0] = int(req.prompt[slot.fed])      # prefill feed
+                toks[i, 0] = int(req.prompt[slot.fed])      # prompt feed
             elif req.output:
                 toks[i, 0] = req.output[-1]                  # autoregressive
             ts[i] = slot.pos
+            ids[i] = req.adapter_id
 
         logits, self.cache = self._step(
-            self.frozen, self.lora, self.cache,
-            jnp.asarray(toks), jnp.asarray(ts))
+            self.frozen, self._stacked(), self.cache,
+            jnp.asarray(toks), jnp.asarray(ts), jnp.asarray(ids))
         logits = np.asarray(logits)
         now = time.time()
 
@@ -140,15 +339,7 @@ class ServingEngine:
                 if slot.fed < len(req.prompt):
                     continue            # still consuming the prompt
             nxt = int(np.argmax(logits[i, :self.cfg.vocab_size]))
-            if req.first_token_at is None:
-                req.first_token_at = now
-            req.output.append(nxt)
-            hit_eos = self.eos_id is not None and nxt == self.eos_id
-            if len(req.output) >= req.max_new or hit_eos \
-                    or slot.pos >= self.max_len - 1:
-                req.finished_at = now
-                self.completed.append(req)
-                slot.request = None
+            self._emit(slot, req, nxt, now)
         self.ticks += 1
         return len(active)
 
@@ -156,16 +347,30 @@ class ServingEngine:
         t0 = time.time()
         while (self.queue or any(not s.free for s in self.slots)) \
                 and self.ticks < max_ticks:
-            self.tick()
-        wall = time.time() - t0
+            n = self.tick()
+            if n == 0 and self.queue:
+                # nothing in flight and the admission controller refused the
+                # head of the queue: no future tick can make progress
+                break
+        return self._summary(time.time() - t0)
+
+    def _summary(self, wall_s: float) -> Dict[str, Any]:
         toks = sum(len(r.output) for r in self.completed)
-        return {
+        in_flight = sum(not s.free for s in self.slots)
+        ttfts = [r.first_token_at - r.submitted_at for r in self.completed
+                 if r.first_token_at is not None]
+        stats: Dict[str, Any] = {
             "completed": len(self.completed),
             "ticks": self.ticks,
+            "prefills": self.prefills,
             "tokens": toks,
-            "tokens_per_sec": toks / max(wall, 1e-9),
-            "mean_ttft_s": float(np.mean(
-                [r.first_token_at - r.submitted_at
-                 for r in self.completed if r.first_token_at])) if
-            self.completed else None,
+            "tokens_per_sec": toks / max(wall_s, 1e-9),
+            "requests_per_s": len(self.completed) / max(wall_s, 1e-9),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "drained": not self.queue and in_flight == 0,
+            "pending": {"queued": len(self.queue), "in_flight": in_flight},
+            "wall_s": wall_s,
         }
+        if self.admission is not None:
+            stats["admission"] = self.admission.stats()
+        return stats

@@ -45,6 +45,59 @@ def test_lora_matmul_batched_leading_dims():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
 
 
+@pytest.mark.parametrize("g,m,k,n,r,e", [
+    (3, 1, 64, 48, 4, 2),     # decode shape: one token per request
+    (4, 8, 128, 128, 8, 4),
+    (2, 5, 100, 72, 4, 5),    # awkward non-multiples exercise padding
+    (6, 1, 256, 96, 16, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul_grouped_sweep(g, m, k, n, r, e, dtype):
+    kk = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(kk[0], (g, m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(kk[1], (k, n), jnp.float32).astype(dtype)
+    a = jax.random.normal(kk[2], (e, k, r), jnp.float32).astype(dtype)
+    b = jax.random.normal(kk[3], (e, r, n), jnp.float32).astype(dtype)
+    ids = jax.random.randint(kk[4], (g,), 0, e)
+    got = ops.lora_matmul_grouped(x, w, a, b, ids, 0.5, bn=64, bk=32)
+    want = ref.lora_matmul_grouped_ref(x, w, a, b, ids, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype] * np.abs(np.asarray(want, np.float32)).max(),
+        rtol=0)
+
+
+def test_lora_matmul_grouped_matches_single_adapter_loop():
+    """The multi-tenant kernel must equal a per-request lora_matmul loop."""
+    kk = jax.random.split(jax.random.PRNGKey(3), 5)
+    g, m, k, n, r, e = 5, 4, 96, 80, 8, 3
+    x = jax.random.normal(kk[0], (g, m, k))
+    w = jax.random.normal(kk[1], (k, n))
+    a = jax.random.normal(kk[2], (e, k, r))
+    b = jax.random.normal(kk[3], (e, r, n))
+    ids = jax.random.randint(kk[4], (g,), 0, e)
+    got = ops.lora_matmul_grouped(x, w, a, b, ids, 0.7, bn=32, bk=32)
+    want = jnp.stack([ops.lora_matmul(x[gi], w, a[aid], b[aid], 0.7,
+                                      bm=16, bn=32, bk=32)
+                      for gi, aid in enumerate(np.asarray(ids))])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_lora_matmul_grouped_2d_rows():
+    """(G, K) input (one token per request, no M axis) squeezes through."""
+    kk = jax.random.split(jax.random.PRNGKey(4), 5)
+    g, k, n, r, e = 4, 64, 48, 4, 2
+    x = jax.random.normal(kk[0], (g, k))
+    w = jax.random.normal(kk[1], (k, n))
+    a = jax.random.normal(kk[2], (e, k, r))
+    b = jax.random.normal(kk[3], (e, r, n))
+    ids = jnp.asarray([0, 1, 1, 0])
+    got = ops.lora_matmul_grouped(x, w, a, b, ids, 1.0, bn=16, bk=16)
+    want = ref.lora_matmul_grouped_ref(x[:, None, :], w, a, b, ids, 1.0)[:, 0]
+    assert got.shape == (g, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

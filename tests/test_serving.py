@@ -1,4 +1,6 @@
 """Serving engine: continuous batching correctness + throughput accounting."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -65,3 +67,90 @@ def test_slot_isolation(setup):
     eng.run_until_drained(max_ticks=20_000)
     second = list(eng.completed[1].output)
     assert first == second
+
+
+# ---------------------------------------------------------------------------
+# Regression tests for the four serving-engine bugs (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_never_copies_the_cache(setup):
+    """Bug 1: _admit used to rebuild the whole stacked cache per admitted
+    slot. Admission must not touch cache buffers at all (lazy reset)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=2,
+                        max_len=32)
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new=2))
+    before = jax.tree_util.tree_leaves(eng.cache)
+    eng._admit()
+    assert not eng.slots[0].free          # the request was admitted...
+    after = jax.tree_util.tree_leaves(eng.cache)
+    assert all(a is b for a, b in zip(before, after, strict=True)), \
+        "admission must not rebuild or copy any cache leaf"
+
+
+def test_run_until_drained_reports_undrained(setup):
+    """Bug 2: exiting on max_ticks silently reported stats as drained."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=1,
+                        max_len=32)
+    prompt = np.asarray([5, 9, 2], np.int32)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=prompt, max_new=4))
+    stats = eng.run_until_drained(max_ticks=6)
+    assert stats["drained"] is False
+    pend = stats["pending"]
+    assert pend["queued"] + pend["in_flight"] + stats["completed"] == 3
+    assert pend["queued"] + pend["in_flight"] > 0
+    # ...and a full drain reports clean
+    stats = eng.run_until_drained()
+    assert stats["drained"] is True
+    assert stats["pending"] == {"queued": 0, "in_flight": 0}
+
+
+def test_submit_rejects_overflowing_request(setup):
+    """Bug 3: len(prompt) + max_new > max_len used to decode past the cache
+    end, where dynamic-update clamping corrupts the last lane."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=1,
+                        max_len=8)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                           max_new=3))
+    assert not eng.queue
+    # exact fit is accepted
+    eng.submit(Request(uid=1, prompt=np.arange(6, dtype=np.int32), max_new=2))
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 1 and len(eng.completed[0].output) == 2
+
+
+def test_submit_truncates_with_flag(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=1,
+                        max_len=8, on_overflow="truncate")
+    req = Request(uid=0, prompt=np.arange(6, dtype=np.int32), max_new=5)
+    eng.submit(req)
+    assert req.truncated and req.max_new == 2
+    with pytest.raises(ValueError, match="alone exceeds"):
+        eng.submit(Request(uid=1, prompt=np.arange(9, dtype=np.int32),
+                           max_new=1))
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 1 and len(req.output) == 2
+
+
+def test_mean_ttft_none_when_no_first_tokens(setup):
+    """Bug 4: np.mean([]) RuntimeWarning -> NaN when completed requests
+    exist but none recorded a first token."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params["frozen"], params["lora"], slots=1,
+                        max_len=32)
+    # a request that was force-completed without ever emitting (e.g. by an
+    # external cancel path) has first_token_at=None
+    eng.completed.append(Request(uid=0, prompt=np.asarray([1], np.int32),
+                                 max_new=1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # RuntimeWarning -> failure
+        stats = eng.run_until_drained()
+    assert stats["completed"] == 1
+    assert stats["mean_ttft_s"] is None
