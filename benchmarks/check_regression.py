@@ -31,7 +31,7 @@ from tools.splint.units import check_key_units  # noqa: E402
 
 BENCH_FILES = ("BENCH_kernels.json", "BENCH_card_calibration.json",
                "BENCH_fleet_scale.json", "BENCH_churn.json",
-               "BENCH_serving.json")
+               "BENCH_serving.json", "BENCH_hierarchy.json")
 
 # required top-level keys per schema tag; every payload must carry
 # "schema", "mode", and a (possibly empty) "gates" dict of positive floats
@@ -41,6 +41,7 @@ REQUIRED_KEYS: Dict[str, Tuple[str, ...]] = {
     "bench-fleet-scale/v1": ("scaling", "big_fleet"),
     "bench-churn/v1": ("sweep", "devices", "quorum"),
     "bench-serving/v1": ("sweep", "arch", "engine"),
+    "bench-hierarchy/v1": ("sweep", "arch", "rounds"),
 }
 
 
@@ -110,6 +111,24 @@ def validate(path: str) -> List[str]:
         # the point of the sweep is a slot x adapter grid: require at least
         # two distinct values along each axis
         for axis in ("slots", "adapters"):
+            vals = {row.get(axis) for row in sweep}
+            if len(vals) < 2:
+                errors.append(f"{path}: sweep covers only {sorted(vals)} "
+                              f"for {axis!r} (need >= 2 distinct values)")
+    if schema == "bench-hierarchy/v1" and not errors:
+        sweep = payload["sweep"]
+        if not sweep:
+            errors.append(f"{path}: sweep is empty")
+        for row in sweep:
+            for key in ("mean_round_s", "mean_delay_s", "mean_energy_j"):
+                val = row.get(key)
+                if not isinstance(val, (int, float)) or not val > 0 \
+                        or val != val or val == float("inf"):
+                    errors.append(f"{path}: sweep {key} must be a positive "
+                                  f"finite number, got {val!r}")
+        # the point of the sweep is a servers x fleet-size grid: require at
+        # least two distinct values along each axis
+        for axis in ("servers", "devices"):
             vals = {row.get(axis) for row in sweep}
             if len(vals) < 2:
                 errors.append(f"{path}: sweep covers only {sorted(vals)} "

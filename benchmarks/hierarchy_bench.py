@@ -1,0 +1,91 @@
+"""Hierarchical multi-server CARD at fleet scale: delay/energy vs the
+number of edge servers x fleet size.
+
+For each (servers, devices) grid point the sweep runs one full hierarchical
+round — the jitted (S, R, D, C) tiered grid, the capacity-constrained
+device->server assignment, and the per-server backhaul aggregation — and
+reports mean per-device delay/energy, the fleet round time (slowest server
+including its backhaul push), and server load imbalance. One server is the
+paper's single-server baseline, so the sweep is the scaling story the
+ROADMAP's top open item asks for: where a server tier buys round time.
+
+The gated numbers are the warm wall-clock of the jitted tiered grid +
+assignment at fixed shapes (compile excluded), one per tier size.
+
+    PYTHONPATH=src python benchmarks/hierarchy_bench.py [--smoke] \
+        [--json BENCH_hierarchy.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+from repro.configs.base import get_config
+from repro.core.hardware import make_heterogeneous_fleet, make_server_tier
+from repro.core.scheduler import simulate_hierarchical_fleet
+
+SCHEMA = "bench-hierarchy/v1"
+
+
+def run(*, fleet_sizes=(100, 1000), tier_sizes=(1, 2, 4, 8),
+        rounds: int = 5, seed: int = 0) -> Dict:
+    cfg = get_config("llama32-1b")
+    out: Dict = {"arch": "llama32-1b", "rounds": rounds, "sweep": []}
+    gates: Dict[str, float] = {}
+    for n_dev in fleet_sizes:
+        fleet = make_heterogeneous_fleet(n_dev, seed=seed)
+        for n_srv in tier_sizes:
+            tier = make_server_tier(n_srv, capacity=-(-n_dev // n_srv),
+                                    seed=seed + n_srv)
+            kw = dict(tier=tier, rounds=rounds, devices=fleet, seed=seed)
+            simulate_hierarchical_fleet(cfg, **kw)     # warm the jitted grid
+            t0 = time.perf_counter()
+            log = simulate_hierarchical_fleet(cfg, **kw)
+            wall_s = time.perf_counter() - t0
+            load = log.decision.server_load
+            out["sweep"].append({
+                "servers": n_srv, "devices": n_dev, "wall_s": wall_s,
+                "mean_delay_s": log.mean_delay(),
+                "mean_energy_j": log.mean_energy(),
+                "mean_round_s": log.mean_round_s(),
+                "mean_aggregation_s": float(
+                    log.decision.aggregation_s.mean()),
+                "load_imbalance": float(load.max() / max(1, load.min())),
+            })
+            if n_dev == max(fleet_sizes):
+                gates[f"hierarchical_card_round_s_{n_srv}srv_{n_dev}dev"] \
+                    = wall_s
+    out["gates"] = gates
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid, just prove the path runs")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the BENCH_hierarchy.json payload here")
+    args = ap.parse_args()
+    if args.smoke:
+        res = run(fleet_sizes=(50, 100), tier_sizes=(1, 2), rounds=3)
+    else:
+        res = run()
+    res["schema"] = SCHEMA
+    res["mode"] = "smoke" if args.smoke else "full"
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    print("servers,devices,mean_round_s,mean_delay_s,mean_energy_j,"
+          "load_imbalance")
+    for row in res["sweep"]:
+        print(f"{row['servers']},{row['devices']},{row['mean_round_s']:.3f},"
+              f"{row['mean_delay_s']:.3f},{row['mean_energy_j']:.3f},"
+              f"{row['load_imbalance']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

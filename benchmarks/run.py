@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract:
   fig4_comparison  — Fig. 4: delay/energy vs Server-only / Device-only
   fleet_scale      — vectorized engine throughput on heterogeneous fleets
   serving_sweep    — multi-tenant LoRA serving (slots x adapters throughput)
+  hierarchy_sweep  — multi-server tier round-time scaling (servers x fleet)
   card_algorithm   — Alg. 1 runtime (O(I) decisions/second)
   split_step       — one real split fine-tuning epoch (tiny model, CPU)
   kernel_*         — Pallas kernel micro-benchmarks
@@ -70,6 +71,14 @@ def smoke() -> None:
                  f"completed={busiest['completed']};"
                  f"drained={busiest['drained']};"
                  f"tok_per_s={busiest['tokens_per_sec']:.0f}"))
+    from benchmarks import hierarchy_bench
+    us, hier = _timed(lambda: hierarchy_bench.run(
+        fleet_sizes=(20, 40), tier_sizes=(1, 2), rounds=2))
+    widest = hier["sweep"][-1]
+    rows.append(("hierarchy_smoke", us,
+                 f"servers={widest['servers']};"
+                 f"round_s={widest['mean_round_s']:.1f};"
+                 f"imbalance={widest['load_imbalance']:.2f}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -127,6 +136,17 @@ def main() -> None:
                  f"rps={busiest['requests_per_s']:.1f};"
                  f"tok_per_s={busiest['tokens_per_sec']:.0f};"
                  f"ttft_s={busiest['mean_ttft_s']:.4f}"))
+
+    # --- hierarchical tier (servers x fleet size round-time scaling) ----------
+    from benchmarks import hierarchy_bench
+    us, hier = _timed(lambda: hierarchy_bench.run())
+    one = next(r for r in hier["sweep"]
+               if r["servers"] == 1 and r["devices"] == 1000)
+    widest = max(hier["sweep"], key=lambda r: (r["devices"], r["servers"]))
+    rows.append(("hierarchy_sweep", us,
+                 f"servers={widest['servers']};"
+                 f"round_s={widest['mean_round_s']:.1f};"
+                 f"tier_speedup={one['mean_round_s'] / widest['mean_round_s']:.1f}"))
 
     # --- CARD runtime (Alg. 1 is O(I)) ---------------------------------------
     from repro.configs.base import get_config

@@ -1,5 +1,6 @@
-# The paper's primary contribution: energy-efficient split learning for
-# LLM fine-tuning — cost model (Sec. III), CARD (Sec. IV), the SL protocol
-# (Sec. II-B stages 1-5) and its real JAX split execution (jax.vjp boundary).
+"""The paper's decision stack: energy-efficient split learning for LLM
+fine-tuning — cost model (Sec. III), CARD (Sec. IV), the SL protocol
+(Sec. II-B stages 1-5) and its real JAX split execution (jax.vjp boundary).
+"""
 from repro.core import (card, channel, cost_model, hardware, protocol,
                         scheduler, splitting)  # noqa: F401

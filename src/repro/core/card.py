@@ -14,17 +14,22 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import BatchedRoundContext, RoundContext
+from repro.core.cost_model import (BatchedRoundContext, RoundContext,
+                                   TieredRoundContext)
 
 
 @dataclass(frozen=True)
 class Decision:
+    """One device-round CARD decision: ``cut`` layers stay on the device,
+    the server runs at ``frequency`` Hz; ``delay`` is the round time in
+    seconds (Eq. 7), ``energy`` the server energy in joules (Eq. 11), and
+    ``cost`` their Eq. 12 scalarization."""
     cut: int
     frequency: float
     cost: float
@@ -160,6 +165,8 @@ def static_cut(ctx: RoundContext, cut: int) -> Decision:
 
 
 def random_cut(ctx: RoundContext, rng: np.random.Generator) -> Decision:
+    """Baseline: uniform cut in [0, n_layers] from ``rng``, frequency
+    still chosen by Eq. 16 (via ``static_cut``)."""
     cut = int(rng.integers(0, ctx.workload.cfg.n_layers + 1))
     return static_cut(ctx, cut)
 
@@ -287,6 +294,8 @@ def batched_card_joint_bruteforce(bctx: BatchedRoundContext, *,
 
 
 def batched_server_only(bctx: BatchedRoundContext) -> BatchedDecision:
+    """Baseline: cut 0 (everything on the server) at ``server_f_max`` Hz
+    for every (round, device) lane; all outputs are (R, D)."""
     cuts = jnp.zeros(bctx.shape, jnp.int32)
     return _batched_evaluate(bctx, cuts,
                              jnp.full(bctx.shape, bctx.server_f_max),
@@ -294,6 +303,8 @@ def batched_server_only(bctx: BatchedRoundContext) -> BatchedDecision:
 
 
 def batched_device_only(bctx: BatchedRoundContext) -> BatchedDecision:
+    """Baseline: cut n_layers (everything on the device) at the minimum
+    feasible server frequency in Hz; all outputs are (R, D)."""
     cuts = jnp.full(bctx.shape, bctx.n_cuts - 1, jnp.int32)
     f = jnp.broadcast_to(bctx.f_min(), bctx.shape)
     return _batched_evaluate(bctx, cuts, f, bctx.corners())
@@ -305,3 +316,345 @@ def batched_static_cut(bctx: BatchedRoundContext, cut) -> BatchedDecision:
     f_star = batched_optimal_frequency(bctx, corners)
     cuts = jnp.broadcast_to(jnp.asarray(cut, jnp.int32), bctx.shape)
     return _batched_evaluate(bctx, cuts, f_star, corners)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical CARD — a tier of servers with device -> server assignment
+# ---------------------------------------------------------------------------
+#
+# SplitLLM (arXiv:2501.13318) hierarchical setting: stage 1 assigns each
+# device to one server of the tier (capacity-constrained), stage 2 runs
+# per-server CARD exactly as before. The assignment objective is device-
+# separable — each (server, device) pair is priced at the device's *optimal*
+# CARD cost under that server (mean over the round batch) — so the two
+# stages decouple the same way Eq. 16 decouples f from c: the per-server
+# grids are computed once for all S servers and the assignment is a pure
+# host-side matching over the (S, D) price matrix.
+
+
+class TierDecision(NamedTuple):
+    """Per-(server, round, device) best-response CARD grids; every field is
+    an (S, R, D) array. ``costs`` is what the assignment stage prices;
+    ``delays`` are seconds, ``energies`` joules, ``freqs`` Hz. ``d_server``
+    is the server-compute share of ``delays`` — the term that contends when
+    one server hosts many devices (parallel-SL round folding)."""
+    cuts: jnp.ndarray
+    freqs: jnp.ndarray
+    costs: jnp.ndarray
+    delays: jnp.ndarray
+    energies: jnp.ndarray
+    d_server: jnp.ndarray
+
+
+def tiered_optimal_frequency(tctx: TieredRoundContext,
+                             corners=None) -> jnp.ndarray:
+    """Eq. (16) per (server, round, device): same closed form as
+    :func:`batched_optimal_frequency` with per-server DVFS bounds."""
+    if corners is None:
+        corners = tctx.corners()
+    d_min, d_max, e_min, e_max = corners
+    q = ((tctx.w * (e_max - e_min))
+         / (2.0 * tctx.xi * jnp.maximum(1.0 - tctx.w, 1e-12)
+            * jnp.maximum(d_max - d_min, 1e-12))) ** (1.0 / 3.0)
+    f_hi = jnp.broadcast_to(tctx.server_f_max[:, None, None], tctx.shape)
+    f = jnp.clip(q, tctx.f_min()[:, None, :], f_hi)
+    return jnp.where(tctx.w >= 1.0, f_hi, f)
+
+
+@partial(jax.jit, static_argnames=("respect_memory",))
+def tiered_card_grid(tctx: TieredRoundContext, *,
+                     respect_memory: bool = True) -> TierDecision:
+    """Alg. 1 for every candidate server at once: closed-form f* per
+    (server, round, device), then one argmin over the (S, R, D, C) cost
+    tensor. Stage 2 of ``hierarchical_card`` — and, gathered along the
+    assignment, identical to running ``batched_card`` per server."""
+    corners = tctx.corners()
+    f_star = tiered_optimal_frequency(tctx, corners)
+    grid = jnp.arange(tctx.n_cuts)
+    cost = tctx.cost(grid, f_star, corners)                  # (S, R, D, C)
+    if respect_memory:
+        infeasible = grid[None, None, None, :] \
+            > tctx.max_cut[None, None, :, None]
+        cost = jnp.where(infeasible, jnp.inf, cost)
+    best = jnp.argmin(cost, axis=-1).astype(jnp.int32)       # (S, R, D)
+    c = best[..., None]
+    parts = tctx.delay_components(c, f_star)
+    return TierDecision(
+        cuts=best,
+        freqs=f_star,
+        costs=tctx.cost(c, f_star, corners)[..., 0],
+        delays=parts.total[..., 0],
+        energies=tctx.server_energy(c, f_star)[..., 0],
+        d_server=parts.server_comp[..., 0])
+
+
+ASSIGN_METHODS = ("greedy", "optimal")
+
+
+def assign_devices(cost_sd: np.ndarray, capacity: np.ndarray, *,
+                   method: str = "greedy") -> np.ndarray:
+    """Capacity-constrained device -> server assignment over an (S, D)
+    price matrix (float64, NaN/inf = infeasible pair). Returns (D,) int.
+
+    ``"greedy"`` — regret-ordered auction-style pass: devices bid in order
+    of decreasing regret (second-best minus best price) and take the
+    cheapest server with remaining capacity. Optimal whenever no capacity
+    binds (then it degenerates to the per-device argmin); a heuristic
+    otherwise — the O(D log D + D S) path for million-device fleets.
+
+    ``"optimal"`` — successive-shortest-path min-cost matching (unit-supply
+    transportation problem): devices are assigned one at a time via the
+    cheapest chain of reassignments in the residual graph. Exactly optimal
+    (the residual graph stays free of negative cycles, the SSP invariant);
+    O(D * S^2 * D) worst case — the oracle for tests and small tiers, not
+    the million-device path.
+    """
+    cost_sd = np.asarray(cost_sd, np.float64)
+    n_servers, n_devices = cost_sd.shape
+    capacity = np.asarray(capacity, np.int64)
+    if capacity.shape != (n_servers,):
+        raise ValueError(f"capacity shape {capacity.shape} != ({n_servers},)")
+    if capacity.sum() < n_devices:
+        raise ValueError(f"tier capacity {int(capacity.sum())} < "
+                         f"{n_devices} devices")
+    if method == "greedy":
+        return _assign_greedy(cost_sd, capacity)
+    if method == "optimal":
+        return _assign_optimal(cost_sd, capacity)
+    raise ValueError(f"unknown assignment method {method!r}; "
+                     f"expected one of {ASSIGN_METHODS}")
+
+
+def _assign_greedy(cost_sd: np.ndarray, capacity: np.ndarray) -> np.ndarray:
+    n_servers, n_devices = cost_sd.shape
+    finite = np.where(np.isfinite(cost_sd), cost_sd, np.inf)
+    if n_servers > 1:
+        part = np.partition(finite, 1, axis=0)
+        regret = part[1] - part[0]                   # (D,)
+        regret = np.where(np.isfinite(regret), regret, np.inf)
+    else:
+        regret = np.zeros(n_devices)
+    remaining = capacity.copy()
+    assign = np.full(n_devices, -1, np.int64)
+    # stable argsort on -regret: ties resolve by device index, deterministic
+    for d in np.argsort(-regret, kind="stable"):
+        for s in np.argsort(finite[:, d], kind="stable"):
+            if remaining[s] > 0 and np.isfinite(finite[s, d]):
+                assign[d] = s
+                remaining[s] -= 1
+                break
+        if assign[d] < 0:
+            raise ValueError(f"device {d} has no feasible server with "
+                             "remaining capacity")
+    return assign
+
+
+def _assign_optimal(cost_sd: np.ndarray, capacity: np.ndarray) -> np.ndarray:
+    """Successive shortest augmenting paths (Bellman-Ford over the server
+    nodes; path length <= S-1 because the residual graph of a partial
+    optimum has no negative cycles)."""
+    n_servers, n_devices = cost_sd.shape
+    remaining = capacity.copy()
+    assign = np.full(n_devices, -1, np.int64)
+    members: list = [[] for _ in range(n_servers)]
+    for d in range(n_devices):
+        dist = np.where(np.isfinite(cost_sd[:, d]), cost_sd[:, d], np.inf)
+        pred: list = [None] * n_servers       # (prev_server, moved_device)
+        for _ in range(n_servers - 1):
+            changed = False
+            for s in range(n_servers):
+                if not np.isfinite(dist[s]) or not members[s]:
+                    continue
+                ds = np.asarray(members[s])
+                # moving device d' from s to s2 costs c[s2,d'] - c[s,d']
+                delta = cost_sd[:, ds] - cost_sd[s, ds][None, :]  # (S, |ds|)
+                j = np.nanargmin(np.where(np.isfinite(delta), delta, np.inf),
+                                 axis=1)
+                step = delta[np.arange(n_servers), j]
+                nd = dist[s] + step
+                upd = np.isfinite(nd) & (nd < dist - 1e-15)
+                for s2 in np.nonzero(upd)[0]:
+                    dist[s2] = nd[s2]
+                    pred[s2] = (s, int(ds[j[s2]]))
+                    changed = True
+            if not changed:
+                break
+        open_servers = np.nonzero(remaining > 0)[0]
+        if open_servers.size == 0 or not np.isfinite(
+                dist[open_servers]).any():
+            raise ValueError(f"device {d} has no feasible augmenting path")
+        target = int(open_servers[np.argmin(dist[open_servers])])
+        # walk the chain of reassignments back to the direct edge
+        s = target
+        while pred[s] is not None:
+            prev_s, moved = pred[s]
+            members[prev_s].remove(moved)
+            members[s].append(moved)
+            assign[moved] = s
+            s = prev_s
+        members[s].append(d)
+        assign[d] = s
+        remaining[target] -= 1
+    return assign
+
+
+def exhaustive_assignment(cost_sd: np.ndarray,
+                          capacity: np.ndarray) -> np.ndarray:
+    """Brute-force over all S^D capacity-feasible assignments — the oracle
+    ``_assign_optimal`` is tested against. Lexicographically-first argmin,
+    strictly for small fleets (<= ~8 devices)."""
+    import itertools
+    cost_sd = np.asarray(cost_sd, np.float64)
+    n_servers, n_devices = cost_sd.shape
+    if n_servers ** n_devices > 2_000_000:
+        raise ValueError(f"{n_servers}^{n_devices} assignments is too many "
+                         "to enumerate — use assign_devices")
+    best_total, best = np.inf, None
+    dev_idx = np.arange(n_devices)
+    for combo in itertools.product(range(n_servers), repeat=n_devices):
+        a = np.asarray(combo)
+        counts = np.bincount(a, minlength=n_servers)
+        if (counts > capacity).any():
+            continue
+        total = cost_sd[a, dev_idx].sum()
+        if total < best_total - 1e-15:
+            best_total, best = total, a
+    if best is None:
+        raise ValueError("no capacity-feasible assignment exists")
+    return best
+
+
+class HierarchicalDecision(NamedTuple):
+    """The hierarchical_card result.
+
+    ``assignment`` — (D,) int server index per device; ``cuts``/``freqs``/
+    ``costs``/``delays``/``energies``/``d_server`` — (R, D) per-device
+    decisions under the assigned server (seconds / joules / Hz, as in
+    BatchedDecision; ``d_server`` is the server-compute share of
+    ``delays``); ``aggregation_s`` — (S, R) per-server backhaul aggregation
+    delay; ``server_load`` — (S,) devices per server.
+    """
+    assignment: np.ndarray
+    cuts: np.ndarray
+    freqs: np.ndarray
+    costs: np.ndarray
+    delays: np.ndarray
+    energies: np.ndarray
+    d_server: np.ndarray
+    aggregation_s: np.ndarray
+    server_load: np.ndarray
+
+
+def _gather_assigned(grid: TierDecision, assign: np.ndarray
+                     ) -> Dict[str, np.ndarray]:
+    """Select each device's (R,) lane from its assigned server's grid."""
+    host = jax.device_get(grid)
+    n_devices = assign.shape[0]
+    dev_idx = np.arange(n_devices)
+    return {field: np.asarray(getattr(host, field))[assign, :, dev_idx].T
+            for field in TierDecision._fields}
+
+
+def hierarchical_card(tctx: TieredRoundContext, *,
+                      respect_memory: bool = True,
+                      assign: str = "greedy") -> HierarchicalDecision:
+    """Two-stage hierarchical CARD (fleet-of-fleets):
+
+    1. price every (server, device) pair at the device's optimal CARD cost
+       under that server (one jitted (S, R, D, C) grid, mean over rounds),
+    2. assign devices to servers under the tier's capacity
+       (:func:`assign_devices`, ``assign="greedy" | "optimal"``),
+    3. read each device's per-round (cut, f) decision off its assigned
+       server's grid and price the per-server backhaul aggregation.
+
+    Decision-equivalent to exhaustive assignment enumeration for
+    ``assign="optimal"`` (tested on fleets <= 8 devices x 2 servers).
+    """
+    grid = tiered_card_grid(tctx, respect_memory=respect_memory)
+    cost_sd = np.asarray(jax.device_get(grid.costs), np.float64).mean(axis=1)
+    a = assign_devices(cost_sd, np.asarray(tctx.capacity), method=assign)
+    picked = _gather_assigned(grid, a)
+    assign_mask = a[None, :] == np.arange(tctx.n_servers)[:, None]
+    agg = jax.device_get(tctx.aggregation_delay(
+        jnp.asarray(assign_mask), jnp.asarray(picked["cuts"])))
+    return HierarchicalDecision(
+        assignment=a.astype(np.int64),
+        cuts=picked["cuts"].astype(np.int32),
+        freqs=picked["freqs"], costs=picked["costs"],
+        delays=picked["delays"], energies=picked["energies"],
+        d_server=picked["d_server"],
+        aggregation_s=np.asarray(agg),
+        server_load=assign_mask.sum(axis=1).astype(np.int64))
+
+
+def hierarchical_card_exhaustive(tctx: TieredRoundContext, *,
+                                 respect_memory: bool = True
+                                 ) -> HierarchicalDecision:
+    """The test oracle: exhaustive assignment enumeration over the same
+    price matrix, then the identical per-server decision readout."""
+    grid = tiered_card_grid(tctx, respect_memory=respect_memory)
+    cost_sd = np.asarray(jax.device_get(grid.costs), np.float64).mean(axis=1)
+    a = exhaustive_assignment(cost_sd, np.asarray(tctx.capacity))
+    picked = _gather_assigned(grid, a)
+    assign_mask = a[None, :] == np.arange(tctx.n_servers)[:, None]
+    agg = jax.device_get(tctx.aggregation_delay(
+        jnp.asarray(assign_mask), jnp.asarray(picked["cuts"])))
+    return HierarchicalDecision(
+        assignment=a.astype(np.int64),
+        cuts=picked["cuts"].astype(np.int32),
+        freqs=picked["freqs"], costs=picked["costs"],
+        delays=picked["delays"], energies=picked["energies"],
+        d_server=picked["d_server"],
+        aggregation_s=np.asarray(agg),
+        server_load=assign_mask.sum(axis=1).astype(np.int64))
+
+
+def hierarchical_card_scalar(workload, devices, tier, channels, sim, *,
+                             respect_memory: bool = True,
+                             assign: str = "optimal") -> HierarchicalDecision:
+    """Float64 scalar reference oracle for :func:`hierarchical_card`: the
+    per-(server, device, round) grids come from the scalar ``card`` loop
+    (``RoundContext`` per cell), the assignment from the same matcher.
+
+    ``channels`` is a ``ChannelBatch`` — both paths must consume identical
+    link realizations, exactly like the flat engines.
+    """
+    n_servers = tier.n_servers
+    rounds, n_devices = channels.rate_up.shape
+    cost_sRD = np.zeros((n_servers, rounds, n_devices))
+    cuts = np.zeros((n_servers, rounds, n_devices), np.int32)
+    freqs = np.zeros((n_servers, rounds, n_devices))
+    delays = np.zeros((n_servers, rounds, n_devices))
+    energies = np.zeros((n_servers, rounds, n_devices))
+    d_srv = np.zeros((n_servers, rounds, n_devices))
+    for s, server in enumerate(tier.servers):
+        for m, dev in enumerate(devices):
+            for r in range(rounds):
+                ctx = RoundContext(workload=workload, device=dev,
+                                   server=server,
+                                   channel=channels.state(r, m), sim=sim)
+                d = card(ctx, respect_memory=respect_memory)
+                cost_sRD[s, r, m] = d.cost
+                cuts[s, r, m] = d.cut
+                freqs[s, r, m] = d.frequency
+                delays[s, r, m] = d.delay
+                energies[s, r, m] = d.energy
+                d_srv[s, r, m] = ctx.delay_components(
+                    d.cut, d.frequency).server_comp
+    cost_sd = cost_sRD.mean(axis=1)
+    a = assign_devices(cost_sd, np.asarray(tier.capacity), method=assign)
+    dev_idx = np.arange(n_devices)
+    pick = lambda x: x[a, :, dev_idx].T                       # noqa: E731
+    picked_cuts = pick(cuts)
+    assign_mask = a[None, :] == np.arange(n_servers)[:, None]
+    adapter_bits = np.array([8 * workload.adapter_bytes(c, sim.adapter_bytes)
+                             for c in range(workload.cfg.n_layers + 1)])
+    bits = adapter_bits[picked_cuts]                          # (R, D)
+    backhaul = np.asarray(tier.backhaul_bits_per_s)
+    agg = (np.where(assign_mask[:, None, :], bits[None], 0.0).sum(axis=-1)
+           / backhaul[:, None])
+    return HierarchicalDecision(
+        assignment=a.astype(np.int64), cuts=picked_cuts,
+        freqs=pick(freqs), costs=pick(cost_sRD), delays=pick(delays),
+        energies=pick(energies), d_server=pick(d_srv), aggregation_s=agg,
+        server_load=assign_mask.sum(axis=1).astype(np.int64))

@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import ChannelBatch, ChannelState
-from repro.core.hardware import DeviceProfile, SimParams, fleet_arrays
+from repro.core.hardware import (DeviceProfile, ServerTier, SimParams,
+                                 fleet_arrays, tier_arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -38,6 +39,8 @@ from repro.core.hardware import DeviceProfile, SimParams, fleet_arrays
 
 
 def attn_fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    """Forward FLOPs per token of one attention block (QKV/out projections
+    plus causal scores at ``seq_len``); 0.0 for attention-free archs."""
     if cfg.is_attention_free:
         return 0.0
     d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
@@ -48,6 +51,8 @@ def attn_fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
 
 
 def mlp_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    """Forward FLOPs per token of one MLP block — gated 3-matmul for dense,
+    routed top-k + shared experts + router for MoE, 0.0 for pure SSM."""
     d = cfg.d_model
     if cfg.is_moe:
         routed = 2 * 3 * d * cfg.d_ff * cfg.top_k
@@ -60,6 +65,8 @@ def mlp_fwd_flops_per_token(cfg: ModelConfig) -> float:
 
 
 def ssm_fwd_flops_per_token(cfg: ModelConfig) -> float:
+    """Forward FLOPs per token of one SSM (Mamba-2) block: in/out
+    projections, short conv, and the SSD chunked scan; 0.0 without SSM."""
     if not cfg.has_ssm:
         return 0.0
     d, di, ns = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
@@ -330,6 +337,44 @@ class RoundContext:
 # ---------------------------------------------------------------------------
 
 
+def _per_cut_tables(workload: Workload, sim: SimParams, compute) -> dict:
+    """Float64 per-cut tables shared by the batched and tiered contexts.
+
+    One accounting for both: ``dev_flops``/``srv_flops`` (effective FLOPs,
+    Eqs. 7-8), ``up_bits``/``down_bits`` (per-local-epoch phi-compressed
+    smashed/gradient bits, Eq. 9), ``adapter_bits`` (once-per-round adapter
+    exchange bits), ``weight_bytes`` (frozen device-side backbone bytes for
+    the memory-feasibility mask). Every array has shape ``(C,)`` with
+    ``C = n_layers + 1`` candidate cuts.
+    """
+    cuts = range(workload.cfg.n_layers + 1)
+    return {
+        "dev_flops": np.array([compute.device_flops(c) for c in cuts]),
+        "srv_flops": np.array([compute.server_flops(c) for c in cuts]),
+        "up_bits": np.array([8 * sim.phi * workload.smashed_bytes(
+            c, sim.act_bytes) for c in cuts]),
+        "down_bits": np.array([8 * sim.phi * workload.gradient_bytes(
+            c, sim.act_bytes) for c in cuts]),
+        "adapter_bits": np.array([8 * workload.adapter_bytes(
+            c, sim.adapter_bytes) for c in cuts]),
+        "weight_bytes": np.array([workload.device_weight_bytes(c)
+                                  for c in cuts]),
+    }
+
+
+def _max_cut_per_device(weight_bytes: np.ndarray,
+                        mem_bytes: np.ndarray) -> np.ndarray:
+    """Largest feasible cut per device: the frozen device-side weights at
+    cut c must fit ``MEM_BUDGET_FRACTION`` of device RAM. ``weight_bytes``
+    is the per-cut ``(C,)`` table, ``mem_bytes`` the ``(D,)`` fleet array;
+    returns int ``(D,)`` (0 when not even the embedding fits)."""
+    feas = (weight_bytes[None, :]
+            <= MEM_BUDGET_FRACTION * mem_bytes[:, None])       # (D, C)
+    return np.where(feas.any(axis=1),
+                    feas.shape[1] - 1 - np.argmax(feas[:, ::-1], axis=1),
+                    0)
+
+
 @dataclass(frozen=True)
 class BatchedRoundContext:
     """``RoundContext`` for a whole fleet sweep at once.
@@ -381,29 +426,18 @@ class BatchedRoundContext:
               server: DeviceProfile, channels: ChannelBatch,
               sim: SimParams, *, cost_source: str = "analytic",
               latency_table=None) -> "BatchedRoundContext":
-        cfg = workload.cfg
         compute = resolve_compute(workload, cost_source, latency_table)
-        cuts = range(cfg.n_layers + 1)
-        dev_flops = np.array([compute.device_flops(c) for c in cuts])
-        srv_flops = np.array([compute.server_flops(c) for c in cuts])
-        up_bits = np.array([8 * sim.phi * workload.smashed_bytes(
-            c, sim.act_bytes) for c in cuts])
-        down_bits = np.array([8 * sim.phi * workload.gradient_bytes(
-            c, sim.act_bytes) for c in cuts])
-        adapter_bits = np.array([8 * workload.adapter_bytes(
-            c, sim.adapter_bytes) for c in cuts])
+        tables = _per_cut_tables(workload, sim, compute)
         arrs = fleet_arrays(devices)
         # memory feasibility: largest c whose frozen weights fit the budget
-        weights = np.array([workload.device_weight_bytes(c) for c in cuts])
-        feas = (weights[None, :]
-                <= MEM_BUDGET_FRACTION * arrs["mem_bytes"][:, None])  # (D, C)
-        max_cut = np.where(feas.any(axis=1),
-                           feas.shape[1] - 1 - np.argmax(feas[:, ::-1], axis=1),
-                           0)
+        max_cut = _max_cut_per_device(tables["weight_bytes"],
+                                      arrs["mem_bytes"])
         return cls(
-            dev_flops=jnp.asarray(dev_flops), srv_flops=jnp.asarray(srv_flops),
-            up_bits=jnp.asarray(up_bits), down_bits=jnp.asarray(down_bits),
-            adapter_bits=jnp.asarray(adapter_bits),
+            dev_flops=jnp.asarray(tables["dev_flops"]),
+            srv_flops=jnp.asarray(tables["srv_flops"]),
+            up_bits=jnp.asarray(tables["up_bits"]),
+            down_bits=jnp.asarray(tables["down_bits"]),
+            adapter_bits=jnp.asarray(tables["adapter_bits"]),
             peak_flops=jnp.asarray(arrs["peak_flops"]),
             max_cut=jnp.asarray(max_cut, jnp.int32),
             rate_up=jnp.asarray(channels.rate_up),
@@ -490,3 +524,214 @@ jax.tree_util.register_dataclass(
                  "rate_down", "w", "xi"],
     meta_fields=["local_epochs", "server_tp_per_hz",
                  "server_f_max", "server_f_min"])
+
+
+# ---------------------------------------------------------------------------
+# Tiered fleet context — Eqs. 7-12 with a leading server axis
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TieredRoundContext:
+    """``BatchedRoundContext`` for a :class:`~repro.core.hardware.ServerTier`.
+
+    The hierarchical-SL setting (SplitLLM, arXiv:2501.13318): a tier of
+    ``S`` edge servers, each with its own DVFS range and backhaul link to
+    the aggregator, shared by one fleet of ``D`` devices. Every delay /
+    energy / cost tensor gains a leading server axis:
+
+      per-cut tables  (C,)     — device-side quantities, server-agnostic
+      per-device      (D,)
+      channel         (R, D)   — the device's radio link to its access
+                                 point, shared across candidate servers
+      per-server      (S,)     — throughput/Hz, DVFS bounds, backhaul
+
+    ``delay_components``/``cost``/``server_energy`` broadcast over
+    ``(S, R, D, C')``; ``corners`` is per ``(S, R, D)``. An ``S = 1`` tier
+    is numerically identical to the single-server batched context (the
+    per-server parameters appear in exactly the same algebraic positions
+    — equivalence-tested in ``tests/test_hierarchy.py``).
+
+    Lanes of devices *not* assigned to a server are masked to NaN by
+    :meth:`mask_unassigned` — downstream reductions must be NaN-aware,
+    exactly like the churn layer's survivor masking.
+
+    Units follow the repo suffix registry: ``*_s`` seconds, ``*_bits``
+    bits, ``*_flops`` effective FLOPs, frequencies in Hz, energies in J.
+    """
+    # per-cut tables (C,)
+    dev_flops: jnp.ndarray
+    srv_flops: jnp.ndarray
+    up_bits: jnp.ndarray
+    down_bits: jnp.ndarray
+    adapter_bits: jnp.ndarray
+    # per-device (D,)
+    peak_flops: jnp.ndarray
+    max_cut: jnp.ndarray
+    # per-(round, device) (R, D)
+    rate_up: jnp.ndarray
+    rate_down: jnp.ndarray
+    # per-server (S,)
+    server_tp_per_hz: jnp.ndarray   # delta_S * sigma_S
+    server_f_max: jnp.ndarray       # Hz
+    server_f_min: jnp.ndarray       # Hz
+    backhaul_bits_per_s: jnp.ndarray
+    # Eq. 12 weights as 0-d arrays (data, not jit-static)
+    w: jnp.ndarray
+    xi: jnp.ndarray
+    # static hyperparameters (pytree aux data)
+    local_epochs: int
+    capacity: Tuple[int, ...]       # per-server device cap (host-side input
+                                    # to the assignment stage, not traced)
+
+    @classmethod
+    def build(cls, workload: Workload, devices: Sequence[DeviceProfile],
+              tier: ServerTier, channels: ChannelBatch, sim: SimParams, *,
+              cost_source: str = "analytic",
+              latency_table=None) -> "TieredRoundContext":
+        """Precompute the per-cut tables (same accounting as
+        ``BatchedRoundContext.build``) and stack the tier's per-server
+        scalars into ``(S,)`` arrays."""
+        compute = resolve_compute(workload, cost_source, latency_table)
+        tables = _per_cut_tables(workload, sim, compute)
+        arrs = fleet_arrays(devices)
+        srv = tier_arrays(tier)
+        max_cut = _max_cut_per_device(tables["weight_bytes"],
+                                      arrs["mem_bytes"])
+        return cls(
+            dev_flops=jnp.asarray(tables["dev_flops"]),
+            srv_flops=jnp.asarray(tables["srv_flops"]),
+            up_bits=jnp.asarray(tables["up_bits"]),
+            down_bits=jnp.asarray(tables["down_bits"]),
+            adapter_bits=jnp.asarray(tables["adapter_bits"]),
+            peak_flops=jnp.asarray(arrs["peak_flops"]),
+            max_cut=jnp.asarray(max_cut, jnp.int32),
+            rate_up=jnp.asarray(channels.rate_up),
+            rate_down=jnp.asarray(channels.rate_down),
+            server_tp_per_hz=jnp.asarray(srv["tp_per_hz"]),
+            server_f_max=jnp.asarray(srv["f_max"]),
+            server_f_min=jnp.asarray(srv["f_min"]),
+            backhaul_bits_per_s=jnp.asarray(srv["backhaul_bits_per_s"]),
+            w=jnp.asarray(float(sim.w)), xi=jnp.asarray(float(sim.xi)),
+            local_epochs=int(sim.local_epochs),
+            capacity=tuple(int(c) for c in tier.capacity))
+
+    # -- shapes --------------------------------------------------------------
+    @property
+    def n_cuts(self) -> int:
+        return self.dev_flops.shape[0]
+
+    @property
+    def n_servers(self) -> int:
+        return self.server_tp_per_hz.shape[0]
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        """(S, R, D) — the per-(server, round, device) decision lattice."""
+        return (self.n_servers,) + self.rate_up.shape
+
+    def _f_expand(self, f) -> jnp.ndarray:
+        f = jnp.asarray(f)
+        return f[..., None] if f.ndim == 3 else f
+
+    # -- Sec. III-C feasible frequency floor, per (server, device) -----------
+    def f_min(self) -> jnp.ndarray:
+        """(S, D): the server must be at least as fast as the device, per
+        candidate server."""
+        return jnp.maximum(
+            self.peak_flops[None, :] / self.server_tp_per_hz[:, None],
+            self.server_f_min[:, None])
+
+    # -- Eqs. 7-10, per component, broadcast over (S, R, D, C') --------------
+    def delay_components(self, cuts, f) -> DelayBreakdown:
+        """``cuts`` broadcastable against trailing ``(S, R, D, C')``
+        (typically the ``(C,)`` grid or an ``(S, R, D, 1)`` decision);
+        ``f`` is an ``(S, R, D)`` per-decision server frequency in Hz."""
+        cuts = jnp.asarray(cuts)
+        f = self._f_expand(f)
+        t = self.local_epochs
+        dev = (t * self.dev_flops[cuts]
+               / self.peak_flops[None, None, :, None])
+        srv = (t * self.srv_flops[cuts]
+               / (f * self.server_tp_per_hz[:, None, None, None]))
+        up = ((t * self.up_bits[cuts] + self.adapter_bits[cuts])
+              / self.rate_up[None, ..., None])
+        down = ((t * self.down_bits[cuts] + self.adapter_bits[cuts])
+                / self.rate_down[None, ..., None])
+        dev, up, srv, down = jnp.broadcast_arrays(dev, up, srv, down)
+        return DelayBreakdown(device_comp=dev, uplink=up,
+                              server_comp=srv, downlink=down)
+
+    def round_delay(self, cuts, f) -> jnp.ndarray:
+        return self.delay_components(cuts, f).total
+
+    # -- Eq. 11 --------------------------------------------------------------
+    def server_energy(self, cuts, f) -> jnp.ndarray:
+        cuts = jnp.asarray(cuts)
+        f = self._f_expand(f)
+        return (self.local_epochs * self.xi * f ** 2 * self.srv_flops[cuts]
+                / self.server_tp_per_hz[:, None, None, None])
+
+    # -- normalization corners (Sec. III-C), each (S, R, D) ------------------
+    def corners(self) -> Tuple[jnp.ndarray, jnp.ndarray,
+                               jnp.ndarray, jnp.ndarray]:
+        last = jnp.array([self.n_cuts - 1])
+        first = jnp.array([0])
+        f_lo = jnp.broadcast_to(self.f_min()[:, None, :], self.shape)
+        f_hi = jnp.broadcast_to(self.server_f_max[:, None, None], self.shape)
+        d_max = self.round_delay(last, f_lo)[..., 0]
+        e_min = self.server_energy(last, f_lo)[..., 0]
+        d_min = self.round_delay(first, f_hi)[..., 0]
+        e_max = self.server_energy(first, f_hi)[..., 0]
+        return d_min, d_max, e_min, e_max
+
+    # -- Eq. 12 --------------------------------------------------------------
+    def cost(self, cuts, f, corners=None) -> jnp.ndarray:
+        if corners is None:
+            corners = self.corners()
+        d_min, d_max, e_min, e_max = corners
+        d = self.round_delay(cuts, f)
+        e = self.server_energy(cuts, f)
+        dn = ((d - d_min[..., None])
+              / jnp.maximum(d_max - d_min, 1e-12)[..., None])
+        en = ((e - e_min[..., None])
+              / jnp.maximum(e_max - e_min, 1e-12)[..., None])
+        return self.w * dn + (1 - self.w) * en
+
+    # -- assignment lanes ----------------------------------------------------
+    def mask_unassigned(self, x: jnp.ndarray,
+                        assign_mask: jnp.ndarray) -> jnp.ndarray:
+        """NaN out lanes of (server, device) pairs that are not assigned.
+
+        ``assign_mask`` is bool ``(S, D)``; ``x`` is ``(S, R, D)`` or
+        ``(S, R, D, C)``. Mirrors the churn layer's survivor masking: all
+        downstream reductions must be NaN-aware.
+        """
+        m = assign_mask[:, None, :]
+        if x.ndim == 4:
+            m = m[..., None]
+        return jnp.where(m, x, jnp.nan)
+
+    def aggregation_delay(self, assign_mask: jnp.ndarray,
+                          cuts: jnp.ndarray) -> jnp.ndarray:
+        """Per-(server, round) backhaul aggregation delay in seconds.
+
+        After closing a round, server ``s`` relays the LoRA adapter update
+        of each of its assigned devices to the aggregator over its
+        backhaul link: ``sum_d adapter_bits[cut_{r,d}] / backhaul``.
+        ``assign_mask`` is bool ``(S, D)``, ``cuts`` the int ``(R, D)``
+        decision; returns ``(S, R)`` (0 for servers with no devices).
+        """
+        bits = self.adapter_bits[jnp.asarray(cuts)]             # (R, D)
+        per_server_bits = jnp.where(assign_mask[:, None, :],
+                                    bits[None, :, :], 0.0).sum(axis=-1)
+        return per_server_bits / self.backhaul_bits_per_s[:, None]
+
+
+jax.tree_util.register_dataclass(
+    TieredRoundContext,
+    data_fields=["dev_flops", "srv_flops", "up_bits", "down_bits",
+                 "adapter_bits", "peak_flops", "max_cut", "rate_up",
+                 "rate_down", "server_tp_per_hz", "server_f_max",
+                 "server_f_min", "backhaul_bits_per_s", "w", "xi"],
+    meta_fields=["local_epochs", "capacity"])

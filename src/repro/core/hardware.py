@@ -77,6 +77,83 @@ def make_heterogeneous_fleet(n: int, *, seed: int = 0,
     return tuple(fleet)
 
 
+# --- Server tier (hierarchical multi-server SL, cf. SplitLLM) --------------
+
+
+@dataclass(frozen=True)
+class ServerTier:
+    """A tier of edge servers behind one aggregator (hierarchical SL).
+
+    The paper models a single edge server; SplitLLM (arXiv:2501.13318)
+    formulates the tier: each device is assigned to one server, every
+    server runs its own DVFS range (``DeviceProfile.f_min``/``f_max``),
+    hosts at most ``capacity[s]`` devices per round, and forwards its
+    aggregated LoRA adapters to the cloud aggregator over a backhaul link
+    of ``backhaul_bits_per_s[s]`` (bit/s).
+
+    ``hierarchical_card`` (``core/card.py``) decides device→server
+    assignment against this structure; ``TieredRoundContext``
+    (``core/cost_model.py``) broadcasts Eqs. 7-12 over the extra server
+    axis.
+    """
+    servers: Tuple[DeviceProfile, ...]
+    capacity: Tuple[int, ...]
+    backhaul_bits_per_s: Tuple[float, ...]
+
+    def __post_init__(self):
+        if not self.servers:
+            raise ValueError("a ServerTier needs at least one server")
+        if len(self.capacity) != len(self.servers) \
+                or len(self.backhaul_bits_per_s) != len(self.servers):
+            raise ValueError(
+                f"per-server fields must match len(servers)={len(self.servers)}"
+                f": capacity={len(self.capacity)}, "
+                f"backhaul={len(self.backhaul_bits_per_s)}")
+        if any(c < 1 for c in self.capacity):
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if any(not (b > 0) for b in self.backhaul_bits_per_s):
+            raise ValueError("backhaul_bits_per_s must be positive, got "
+                             f"{self.backhaul_bits_per_s}")
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.servers)
+
+    @property
+    def total_capacity(self) -> int:
+        return sum(self.capacity)
+
+
+def make_server_tier(n: int, *, base: DeviceProfile = SERVER_RTX4060TI,
+                     capacity: int = 1000,
+                     backhaul_bits_per_s: float = 1e9,
+                     seed: int = 0) -> ServerTier:
+    """An ``n``-server tier for hierarchy sweeps: each server is the base
+    profile with its clock jittered +-20% (heterogeneous provisioning) and
+    its backhaul jittered +-50%, seeded like ``make_heterogeneous_fleet``."""
+    rng = np.random.default_rng(seed)
+    f_scales = rng.uniform(0.8, 1.2, size=n)
+    b_scales = rng.uniform(0.5, 1.5, size=n)
+    servers = tuple(replace(base, name=f"server{s + 1}",
+                            f_max=base.f_max * float(f_scales[s]))
+                    for s in range(n))
+    return ServerTier(servers=servers, capacity=(capacity,) * n,
+                      backhaul_bits_per_s=tuple(
+                          backhaul_bits_per_s * float(b) for b in b_scales))
+
+
+def tier_arrays(tier: ServerTier) -> Dict[str, "object"]:
+    """Stack per-server scalars into numpy arrays for the tiered engine."""
+    return {
+        "tp_per_hz": np.array([s.delta * s.sigma for s in tier.servers],
+                              np.float64),
+        "f_max": np.array([s.f_max for s in tier.servers], np.float64),
+        "f_min": np.array([s.f_min for s in tier.servers], np.float64),
+        "capacity": np.array(tier.capacity, np.int64),
+        "backhaul_bits_per_s": np.array(tier.backhaul_bits_per_s, np.float64),
+    }
+
+
 def profile_from_throughput(name: str, flops_per_s: float, *,
                             f_max: float = 1.0 * GIGA,
                             **kwargs) -> DeviceProfile:
@@ -125,6 +202,9 @@ def tpu_pod_profile(chips: int) -> DeviceProfile:
 
 @dataclass(frozen=True)
 class SimParams:
+    """Simulation constants (paper Table II): Eq. 12 weights, compression
+    ratios, payload precisions in bytes, and radio parameters (bandwidth
+    in Hz, transmit powers in dBm)."""
     xi: float = 1e-25          # server power coefficient
     w: float = 0.2             # delay weight in Eq. (12)
     local_epochs: int = 5      # T_{m,n}

@@ -45,6 +45,11 @@ POLICIES: Dict[str, Policy] = {
 
 @dataclasses.dataclass
 class RoundLog:
+    """One (round, device) record of live split fine-tuning: the CARD
+    decision (``cut`` layers, ``frequency`` Hz), its modeled ``delay`` in
+    seconds and ``server_energy`` in joules, the measured training
+    ``loss``, plus churn accounting (``status``/``attempts``/retry
+    ``backoff_s``)."""
     round_idx: int
     device: str
     cut: int
@@ -61,6 +66,8 @@ class RoundLog:
 
 @dataclasses.dataclass
 class RoundSummary:
+    """Per-round aggregation outcome: how many devices were scheduled vs
+    survived churn, and whether the quorum committed the adapter update."""
     round_idx: int
     attempted: int            # devices scheduled this round (member + closed)
     survived: int
@@ -69,6 +76,10 @@ class RoundSummary:
 
 @dataclasses.dataclass
 class TrainResult:
+    """Everything a fine-tuning run produced: the final LoRA params, the
+    flat ``RoundLog`` stream, and per-round commit summaries; the mean_*
+    helpers average surviving (``status == "ok"``) rounds only — delay in
+    seconds, energy in joules."""
     lora: Params
     logs: List[RoundLog]
     round_summaries: List[RoundSummary] = dataclasses.field(

@@ -57,6 +57,10 @@ def _masked_rowmax(a: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class FleetLog:
+    """Per-(round, device) output of ``simulate_fleet``: all arrays are
+    (rounds, devices) — ``freqs`` in Hz, ``delays`` (and the d_* component
+    breakdown) in seconds, ``energies`` in joules; under churn,
+    non-survivor lanes are NaN with ``participation`` marking commits."""
     policy: str
     channel_state: str
     rounds: int
@@ -197,6 +201,109 @@ def _simulate_fleet_vectorized(cfg: ModelConfig, *, policy: str,
                     d_downlink=np.asarray(host.d_downlink, np.float64))
 
 
+def _shard_pad(a: np.ndarray, pad: int, value) -> np.ndarray:
+    """Pad the trailing (devices) axis with ``value`` lanes.
+
+    Pad lanes are real finite decision problems (rate 1 bit/s, 1 FLOP/s
+    device) whose results are sliced off after the sharded call — padding
+    with NaN/0 would poison argmin/div inside the grid."""
+    if pad == 0:
+        return np.asarray(a)
+    width = [(0, 0)] * (np.ndim(a) - 1) + [(0, pad)]
+    return np.pad(np.asarray(a), width, constant_values=value)
+
+
+def _simulate_fleet_sharded(cfg: ModelConfig, *, mesh, policy: str,
+                            channel_state: str, rounds: int,
+                            devices: Sequence[DeviceProfile],
+                            server: DeviceProfile, sim: SimParams,
+                            seed: int, static_cut: Optional[int],
+                            respect_memory: bool, cost_source: str,
+                            latency_table, deadline_spec) -> FleetLog:
+    """The vectorized engine with the *devices* axis sharded over a 1-D
+    ``("data",)`` mesh — one ``jit(shard_map(...))`` call for the whole
+    fleet, the 10^6-device path.
+
+    Bit-identical to ``engine="vectorized"`` on one host: every per-lane
+    quantity in the (rounds, devices, cuts) grid — corners, Eq. 16 f*, the
+    argmin over cuts — is computed from that device's own lane (no
+    cross-device reduction anywhere in ``batched_card``), so sharding the
+    axis changes data placement, never values. Channel draws stay on the
+    host (same ``draw_channel_matrix`` stream), devices are padded to a
+    shard multiple with dummy lanes and trimmed off the result.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import fleet_shard_map
+
+    nd = len(devices)
+    batch = draw_channel_matrix(channel_state, rounds, nd, seed=seed,
+                                bandwidth_hz=sim.bandwidth_hz,
+                                tx_power_dbm_up=sim.tx_power_dbm_up,
+                                tx_power_dbm_down=sim.tx_power_dbm_down,
+                                noise_dbm_per_hz=sim.noise_dbm_per_hz)
+    workload = Workload(cfg, sim.mini_batch, sim.seq_len)
+    bctx = BatchedRoundContext.build(workload, devices, server, batch, sim,
+                                     cost_source=cost_source,
+                                     latency_table=latency_table)
+    n_shards = int(np.prod(mesh.devices.shape))
+    pad = (-nd) % n_shards
+    bctx = dataclasses.replace(
+        bctx,
+        peak_flops=_shard_pad(bctx.peak_flops, pad, 1.0),
+        max_cut=_shard_pad(bctx.max_cut, pad, 0),
+        rate_up=_shard_pad(bctx.rate_up, pad, 1.0),
+        rate_down=_shard_pad(bctx.rate_down, pad, 1.0))
+    # same pytree, PartitionSpec leaves: tables/weights replicated, every
+    # device-axis field sharded on "data"
+    specs = dataclasses.replace(
+        bctx, dev_flops=P(), srv_flops=P(), up_bits=P(), down_bits=P(),
+        adapter_bits=P(), peak_flops=P("data"), max_cut=P("data"),
+        rate_up=P(None, "data"), rate_down=P(None, "data"), w=P(), xi=P())
+    if policy == "random":
+        rng = np.random.default_rng(seed)
+        draws = rng.integers(0, cfg.n_layers + 1, size=(rounds, nd))
+    else:
+        draws = np.zeros((rounds, nd), np.int64)
+    draws = _shard_pad(draws, pad, 0)
+
+    def _decide(ctx, cut_draws):
+        if policy == "card":
+            return card_lib.batched_card(ctx, respect_memory=respect_memory,
+                                         deadline=deadline_spec)
+        if policy == "server_only":
+            return card_lib.batched_server_only(ctx)
+        if policy == "device_only":
+            return card_lib.batched_device_only(ctx)
+        if policy in ("static", "random"):
+            cut = static_cut if policy == "static" else cut_draws
+            return card_lib.batched_static_cut(ctx, cut)
+        raise ValueError(f"unknown policy {policy!r}")
+
+    # eager shard_map (no outer jit): the policy fns are already jitted, so
+    # each shard runs the *same compiled executable* as the unsharded
+    # engine — wrapping the shard_map in another jit would inline that jit
+    # and let XLA re-fuse the grid differently (one-ulp drift in the logs),
+    # breaking the bit-identity contract this engine is tested against
+    sharded = fleet_shard_map(_decide, mesh,
+                              in_specs=(specs, P(None, "data")),
+                              out_specs=P(None, "data"))
+    host = jax.device_get(sharded(bctx, draws))
+    trim = {f: np.asarray(getattr(host, f))[:, :nd]
+            for f in ("cuts", "freqs", "delays", "energies",
+                      "d_device", "d_uplink", "d_server", "d_downlink")}
+    return FleetLog(policy=policy, channel_state=channel_state, rounds=rounds,
+                    device_names=[d.name for d in devices],
+                    cuts=trim["cuts"].astype(np.int32),
+                    freqs=trim["freqs"].astype(np.float64),
+                    delays=trim["delays"].astype(np.float64),
+                    energies=trim["energies"].astype(np.float64),
+                    d_device=trim["d_device"].astype(np.float64),
+                    d_uplink=trim["d_uplink"].astype(np.float64),
+                    d_server=trim["d_server"].astype(np.float64),
+                    d_downlink=trim["d_downlink"].astype(np.float64))
+
+
 def apply_faults(log: FleetLog, realization: FaultRealization,
                  deadline: Optional[DeadlinePolicy] = None) -> FleetLog:
     """Overlay a fault realization on a decision log (both engines share
@@ -273,7 +380,8 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
                    cost_source: str = "analytic",
                    latency_table=None,
                    fault_model: Optional[FaultModel] = None,
-                   deadline: Optional[DeadlinePolicy] = None) -> FleetLog:
+                   deadline: Optional[DeadlinePolicy] = None,
+                   mesh=None) -> FleetLog:
     """Run ``rounds`` of per-device CARD (or baseline) decisions.
 
     ``cost_source="measured"`` routes per-cut compute delays through a
@@ -286,6 +394,11 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
     policy and, when ``objective_deadline_s`` is set, routes a
     straggler-aware :class:`card.DeadlineSpec` into the CARD objective —
     both engines consume the identical spec.
+
+    ``mesh`` (a 1-D ``("data",)`` mesh from ``launch.mesh.make_fleet_mesh``)
+    shards the devices axis of the vectorized engine across host devices in
+    one ``jit(shard_map(...))`` call — bit-identical to the unsharded
+    vectorized engine, scales the sweep to 10^6 devices.
     """
     deadline_spec = None
     if deadline is not None and deadline.objective_deadline_s is not None:
@@ -300,7 +413,12 @@ def simulate_fleet(cfg: ModelConfig, *, policy: str = "card",
                   static_cut=static_cut, respect_memory=respect_memory,
                   cost_source=cost_source, latency_table=latency_table,
                   deadline_spec=deadline_spec)
-    if engine == "vectorized":
+    if mesh is not None:
+        if engine != "vectorized":
+            raise ValueError(f"mesh= requires engine='vectorized', "
+                             f"got {engine!r}")
+        log = _simulate_fleet_sharded(cfg, mesh=mesh, **kwargs)
+    elif engine == "vectorized":
         log = _simulate_fleet_vectorized(cfg, **kwargs)
     elif engine == "scalar":
         log = _simulate_fleet_scalar(cfg, **kwargs)
@@ -372,3 +490,77 @@ def compare_policies(cfg: ModelConfig, *, rounds: int = 50,
                 seed=seed, sim=sim, devices=devices, server=server,
                 engine=engine)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (multi-server) fleet sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HierarchicalLog:
+    """``simulate_fleet`` summary for a server *tier* (hierarchical SL).
+
+    ``decision`` is the full :class:`card.HierarchicalDecision` (assignment
+    (D,), per-device (R, D) grids in s/J/Hz, per-server (S, R)
+    ``aggregation_s``); the round-time fields fold the backhaul stage in:
+    a round ends when the slowest server has finished its slowest device
+    *and* pushed its aggregated adapters upstream.
+    """
+    channel_state: str
+    rounds: int
+    n_servers: int
+    decision: "card_lib.HierarchicalDecision"
+    round_s: np.ndarray          # (rounds,) max over servers incl. backhaul
+    server_round_s: np.ndarray   # (S, rounds) per-server close time
+
+    def mean_round_s(self) -> float:
+        return float(self.round_s.mean())
+
+    def mean_delay(self) -> float:
+        return _masked_mean(self.decision.delays)
+
+    def mean_energy(self) -> float:
+        return _masked_mean(self.decision.energies)
+
+
+def simulate_hierarchical_fleet(cfg: ModelConfig, *,
+                                tier, rounds: int = 50,
+                                devices: Sequence[DeviceProfile] = EDGE_FLEET,
+                                channel_state: str = "normal",
+                                sim: SimParams = DEFAULT_SIM, seed: int = 0,
+                                assign: str = "greedy",
+                                respect_memory: bool = True
+                                ) -> HierarchicalLog:
+    """One hierarchical CARD sweep: draw the (rounds, devices) channel block
+    (same stream as the flat engines), run :func:`card.hierarchical_card`
+    against the :class:`hardware.ServerTier`, and fold per-server parallel
+    round times with the backhaul aggregation stage."""
+    from repro.core.cost_model import TieredRoundContext
+
+    batch = draw_channel_matrix(channel_state, rounds, len(devices),
+                                seed=seed, bandwidth_hz=sim.bandwidth_hz,
+                                tx_power_dbm_up=sim.tx_power_dbm_up,
+                                tx_power_dbm_down=sim.tx_power_dbm_down,
+                                noise_dbm_per_hz=sim.noise_dbm_per_hz)
+    workload = Workload(cfg, sim.mini_batch, sim.seq_len)
+    tctx = TieredRoundContext.build(workload, devices, tier, batch, sim)
+    dec = card_lib.hierarchical_card(tctx, respect_memory=respect_memory,
+                                     assign=assign)
+    # per-server close: slowest assigned device — with the server's compute
+    # split among its load (a device's decision prices one d_server share;
+    # hosting L devices stretches that share L-fold, exactly the contention
+    # rule parallel_round_stats applies to the flat engine) — then the
+    # backhaul push
+    assign_mask = dec.assignment[None, :] == np.arange(tier.n_servers)[:, None]
+    load = np.maximum(dec.server_load, 1)[dec.assignment]       # (D,)
+    contended = dec.delays + (load - 1)[None, :] * dec.d_server  # (R, D)
+    per_srv = np.where(assign_mask[:, None, :], contended[None], np.nan)
+    slowest = np.where(assign_mask.any(axis=1)[:, None],
+                       _masked_rowmax(per_srv.reshape(-1, len(devices)))
+                       .reshape(tier.n_servers, rounds), 0.0)
+    server_round_s = slowest + dec.aggregation_s
+    return HierarchicalLog(channel_state=channel_state, rounds=rounds,
+                           n_servers=tier.n_servers, decision=dec,
+                           round_s=server_round_s.max(axis=0),
+                           server_round_s=server_round_s)

@@ -36,6 +36,9 @@ from repro.models.common import Params, softmax_cross_entropy
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-last-axis int8 quantization of smashed activations:
+    returns (int8 values shaped like ``x``, float32 scales with the last
+    axis kept as size 1)."""
     scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-8)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)

@@ -43,3 +43,25 @@ def model_axis(mesh) -> str:
 def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     """A CPU-sized mesh for tests."""
     return jax.make_mesh(shape, axes)
+
+
+def make_fleet_mesh(n_shards: int = 0):
+    """A 1-D ``("data",)`` mesh that shards the *devices* axis of a fleet
+    sweep (``simulate_fleet(..., mesh=...)``). ``n_shards=0`` uses every
+    host device. Distinct from the 2-D model meshes above: fleet sweeps
+    have no model axis — each lane is one edge device's decision problem.
+    """
+    if n_shards <= 0:
+        n_shards = len(jax.devices())
+    return jax.make_mesh((n_shards,), ("data",))
+
+
+def fleet_shard_map(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across JAX API revisions (0.4.x keeps it under
+    ``jax.experimental.shard_map`` with ``check_rep`` instead of
+    ``check_vma``) — same shim as ``models/moe_shard_map.py``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _esm
+    return _esm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

@@ -427,6 +427,72 @@ def test_fault_hygiene_ok_suffixed_or_nonnumeric():
 
 
 # ---------------------------------------------------------------------------
+# doc-hygiene
+# ---------------------------------------------------------------------------
+
+_CORE_PATH = "src/repro/core/snippet.py"
+
+
+def _doc_findings(src, path=_CORE_PATH):
+    findings = engine.scan_source(textwrap.dedent(src), path)
+    return [f for f in findings if f.rule == "doc-hygiene"]
+
+
+def test_doc_hygiene_flags_undocumented_core_surface():
+    found = _doc_findings("""
+        import numpy as np
+
+        def round_delay_s(d_flops, f_hz):
+            total = d_flops / f_hz
+            return total
+
+        class FleetThing:
+            x: int = 0
+            y: int = 1
+    """)
+    messages = [f.message for f in found]
+    assert any("module has no docstring" in m for m in messages)
+    assert any("'round_delay_s'" in m for m in messages)
+    assert any("'FleetThing'" in m for m in messages)
+    assert len(found) == 3
+
+
+def test_doc_hygiene_ok_documented_private_or_trivial():
+    found = _doc_findings('''
+        """Module contract lives here."""
+
+        def round_delay_s(d_flops, f_hz):
+            """Round delay in seconds for d_flops work at f_hz."""
+            return d_flops / f_hz
+
+        def _helper(x):
+            y = x + 1
+            return y
+
+        def alias(x):
+            return round_delay_s(x, 1.0)
+
+        class Fleet:
+            """Documented class; methods are exempt."""
+
+            def undocumented_method(self):
+                z = 1
+                return z
+    ''')
+    assert found == []
+
+
+def test_doc_hygiene_scoped_to_core_paths():
+    src = """
+        def undocumented(x):
+            y = x + 1
+            return y
+    """
+    assert _doc_findings(src, path="benchmarks/snippet.py") == []
+    assert len(_doc_findings(src, path=_CORE_PATH)) == 2  # module + def
+
+
+# ---------------------------------------------------------------------------
 # pragmas / baseline / report
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,123 @@
+"""Markdown link-check for the documentation layer (CI ``docs`` job).
+
+Pure stdlib. Scans the given markdown files/directories for inline links
+and images, and fails (exit 1) when a relative link points at a file that
+does not exist, or an intra-repo anchor (``#heading``) names a heading
+that is not in the target file. External links (``http(s)://``,
+``mailto:``) are skipped — CI must not flake on someone else's server.
+
+Usage::
+
+    python tools/check_docs.py README.md docs benchmarks/README.md ROADMAP.md
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# inline [text](target) and ![alt](target); stops at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces->dashes."""
+    text = re.sub(r"[`*_~\[\]()!]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return re.sub(r" ", "-", text)
+
+
+def iter_md_files(paths: List[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.md")))
+        elif path.suffix == ".md" and path.exists():
+            out.append(path)
+        else:
+            print(f"check_docs: no such markdown input: {p}",
+                  file=sys.stderr)
+            sys.exit(2)
+    return out
+
+
+def extract_links(text: str) -> List[Tuple[int, str]]:
+    """(line_number, target) for every inline link outside code fences."""
+    links: List[Tuple[int, str]] = []
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if _CODE_FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            links.append((i, m.group(1)))
+    return links
+
+
+def anchors_of(path: Path) -> set:
+    slugs = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if _CODE_FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def check_file(md: Path, repo_root: Path) -> List[str]:
+    errors: List[str] = []
+    for line_no, target in extract_links(md.read_text()):
+        if target.startswith(_EXTERNAL) or target.startswith("<"):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:           # same-file anchor
+            dest = md
+        else:
+            dest = (md.parent / path_part).resolve()
+            try:
+                dest.relative_to(repo_root)
+            except ValueError:
+                errors.append(f"{md}:{line_no}: link escapes the repo: "
+                              f"{target}")
+                continue
+            if not dest.exists():
+                errors.append(f"{md}:{line_no}: broken link: {target}")
+                continue
+        if anchor and dest.suffix == ".md" and dest.is_file():
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{md}:{line_no}: missing anchor "
+                              f"#{anchor} in {dest.name}")
+    return errors
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="+",
+                        help="markdown files and/or directories")
+    args = parser.parse_args(argv)
+    repo_root = Path.cwd().resolve()
+    files = iter_md_files(args.paths)
+    errors: List[str] = []
+    for md in files:
+        errors.extend(check_file(md, repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} file(s), {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

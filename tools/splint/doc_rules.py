@@ -1,0 +1,64 @@
+"""doc-hygiene rule: the decision stack must stay documented.
+
+``repro.core`` is the repo's public surface — the modules the README's
+paper->module map points at. A module landing there without a module
+docstring is invisible to that map; a public entry point without one
+forces the next reader back to the call sites to recover units and
+shapes. The rule keeps the documentation layer from rotting the way the
+pre-README repo did (baseline stays empty: new findings fail CI).
+
+Detected, only for files under a ``core/`` package directory:
+
+  * missing or empty module docstring;
+  * a public (non-underscore) module-level function or class whose body
+    has no docstring — methods are exempt (the class docstring carries
+    the contract), as are trivial defs (single-statement bodies such as
+    property passthroughs and aliases).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.splint.engine import Finding
+
+RULE = "doc-hygiene"
+
+
+def _in_scope(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return "core" in parts
+
+
+def _has_docstring(node) -> bool:
+    doc = ast.get_docstring(node)
+    return bool(doc and doc.strip())
+
+
+def _trivial(node) -> bool:
+    """Single-statement bodies (aliases, passthroughs) need no docstring."""
+    return len(node.body) <= 1
+
+
+def check(tree: ast.AST, lines, path: str) -> List[Finding]:
+    if not _in_scope(path):
+        return []
+    findings: List[Finding] = []
+    if not _has_docstring(tree):
+        findings.append(Finding(
+            RULE, path, 1, 0,
+            "module has no docstring — core/ modules are the repo's "
+            "public surface and must state what they model"))
+    for node in ast.iter_child_nodes(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_") or _has_docstring(node) \
+                or _trivial(node):
+            continue
+        kind = "class" if isinstance(node, ast.ClassDef) else "function"
+        findings.append(Finding(
+            RULE, path, node.lineno, node.col_offset,
+            f"public {kind} '{node.name}' has no docstring — state its "
+            "contract (units for _s/_hz/_j values, array shapes)"))
+    return findings

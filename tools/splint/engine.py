@@ -38,6 +38,7 @@ RULES = (
     "prng-reuse",     # jax.random keys consumed more than once / in loops
     "dtype-promo",    # strong-typed scalars widening f32/bf16 hot paths
     "fault-hygiene",  # swallowed exceptions, unsuffixed timeout/deadline
+    "doc-hygiene",    # core/ modules + public entry points need docstrings
     "parse-error",    # file does not parse (always reported)
 )
 
@@ -233,11 +234,12 @@ def iter_py_files(paths: Sequence[str]) -> List[Path]:
 
 
 def default_checkers():
-    from tools.splint import (dtype_rules, fault_rules, jit_hygiene,
-                              pallas_rules, prng_rules, trace_safety, units)
+    from tools.splint import (doc_rules, dtype_rules, fault_rules,
+                              jit_hygiene, pallas_rules, prng_rules,
+                              trace_safety, units)
     return [trace_safety.check, jit_hygiene.check, pallas_rules.check,
             units.check, prng_rules.check, dtype_rules.check,
-            fault_rules.check]
+            fault_rules.check, doc_rules.check]
 
 
 @dataclasses.dataclass
